@@ -1,0 +1,76 @@
+"""Roofline report: reads the dry-run results JSON and emits the per-cell
+three-term table (compute / memory / collective seconds, dominant term,
+useful-FLOPs ratio) that EXPERIMENTS.md §Roofline embeds."""
+
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+HEADER = ("arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+          "dominant", "useful_flops", "mem_GiB/dev")
+
+
+def load(path: str = RESULTS) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows(results: dict, mesh: str | None = None):
+    out = []
+    for key in sorted(results):
+        r = results[key]
+        if r.get("status") != "ok":
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        t = r["roofline"]
+        mem = r.get("memory_per_device_bytes", 0) / 2 ** 30
+        uf = r.get("useful_flops_ratio")
+        out.append((r["arch"], r["shape"], r["mesh"],
+                    f"{t['compute_s']:.4f}", f"{t['memory_s']:.4f}",
+                    f"{t['collective_s']:.4f}", t["dominant"].replace("_s", ""),
+                    f"{uf:.3f}" if uf else "-", f"{mem:.2f}"))
+    return out
+
+
+def markdown_table(results: dict, mesh: str = "single") -> str:
+    lines = ["| " + " | ".join(HEADER) + " |",
+             "|" + "|".join(["---"] * len(HEADER)) + "|"]
+    for row in rows(results, mesh):
+        lines.append("| " + " | ".join(row) + " |")
+    skips = [f"| {r['arch']} | {r['shape']} | - | skipped: {r['skip_reason'][:60]}... |"
+             for r in results.values()
+             if r.get("status") == "skipped" and r["mesh"] == mesh]
+    return "\n".join(lines + skips)
+
+
+def run(full: bool = True):
+    if not os.path.exists(RESULTS):
+        return [("roofline/cells_ok", 0.0, "dryrun_results.json missing — "
+                 "run python -m repro.launch.dryrun --all --mesh both")]
+    results = load()
+    ok = [r for r in results.values() if r.get("status") == "ok"]
+    skipped = [r for r in results.values() if r.get("status") == "skipped"]
+    errors = [r for r in results.values() if r.get("status") == "error"]
+    out = [("roofline/cells_ok", float(len(ok)),
+            f"skipped={len(skipped)} errors={len(errors)}")]
+    for dom in ("compute_s", "memory_s", "collective_s"):
+        n = sum(1 for r in ok if r["roofline"]["dominant"] == dom)
+        out.append((f"roofline/dominated_by_{dom.replace('_s', '')}",
+                    float(n), f"of {len(ok)} compiled cells"))
+    if ok:
+        worst = min((r for r in ok if r.get("useful_flops_ratio")),
+                    key=lambda r: r["useful_flops_ratio"])
+        out.append(("roofline/worst_useful_flops",
+                    worst["useful_flops_ratio"],
+                    f"{worst['arch']}x{worst['shape']}x{worst['mesh']}"))
+    return out
+
+
+if __name__ == "__main__":
+    for name, v, derived in run():
+        print(f"{name},{v},{derived}")
+    if os.path.exists(RESULTS):
+        print(markdown_table(load()))

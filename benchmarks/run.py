@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure + system benches.
+
+Prints ``name,value,derived`` CSV rows.  ``--quick`` shrinks anneal budgets
+for CI-speed runs; the default reproduces the full budgets used in
+EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table2,table3,fig2,roofline,throughput")
+    args = ap.parse_args()
+    full = not args.quick
+
+    from benchmarks import (fig2_testing, guided_search, roofline,
+                            table2_attention, table3_gemm, throughput)
+    suites = {
+        "table2": table2_attention.run,
+        "table3": table3_gemm.run,
+        "fig2": fig2_testing.run,
+        "roofline": roofline.run,
+        "throughput": throughput.run,
+        "guided": guided_search.run,
+    }
+    only = set(args.only.split(",")) if args.only else set(suites)
+    print("name,value,derived")
+    failed = False
+    for name, fn in suites.items():
+        if name not in only:
+            continue
+        try:
+            for row in fn(full=full):
+                n, v, derived = row
+                print(f"{n},{v},{derived}")
+        except Exception as e:
+            failed = True
+            print(f"{name}/ERROR,nan,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Paper Table 2: fused attention (flash-attention), SIP vs baseline.
+
+Paper setting: A100 fp16, input [1, 4, 16384, 64] (batch, heads, seq, hd);
+SIP reduced kernel duration 6.2% (1.37ms -> 1.29ms) by reordering global
+memory instructions.  Here: the Pallas flash-attention body's instruction
+stream is annealed under the TPU cost model at the paper's exact shape; the
+discovered schedule is the classic V-prefetch/software-pipeline reorder
+(printed as a before/after listing diff, cf. paper Listings 4 vs 5).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import annealing, energy as energy_mod
+from repro.core.mutation import MutationPolicy
+from repro.core.schedule import Schedule
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+
+PAPER_SHAPE = dict(b=1, hq=4, hkv=4, sq=16384, skv=16384, d=64, causal=False,
+                   window=None, dtype="bfloat16")
+PAPER_IMPROVEMENT = 0.062           # Table 2: 1.37ms -> 1.29ms
+
+
+def _anneal(knob_prob: float = 0.0, seed: int = 0, cooling: float = 1.01):
+    static = dict(PAPER_SHAPE)
+    space = fa_ops.space(**static)
+    program_for = lambda s: fa_ops.program_for(s, **static)
+    energy = energy_mod.CostModelEnergy(program_for)
+    policy = MutationPolicy(space=space, program_for=program_for,
+                            knob_prob=knob_prob)
+    knobs = space.default_knobs()
+    knobs["n_chunks"] = 4            # expose per-chunk loads to the search
+    x0 = Schedule(knobs=knobs)
+    return annealing.anneal(x0, energy, policy.propose, t_max=1.0,
+                            t_min=5e-3, cooling=cooling, seed=seed), program_for
+
+
+def run(full: bool = True):
+    rows = []
+    res, program_for = _anneal(cooling=1.01 if full else 1.1)
+    rows.append(("table2/attention_baseline_us", res.initial_raw * 1e6,
+                 "whole-kernel cost-model latency, default schedule"))
+    rows.append(("table2/attention_sip_us", res.best_raw * 1e6,
+                 f"improvement={res.improvement:.2%} "
+                 f"(paper: {PAPER_IMPROVEMENT:.2%}), evals={res.evals}"))
+
+    # correctness of the tuned schedule on an executable (reduced) shape
+    static = dict(PAPER_SHAPE, sq=256, skv=256, dtype="float32")
+    sched = Schedule(knobs=dict(res.best.knobs))
+    prog_small = fa_ops.program_for(sched, **static)
+    order = res.best.order
+    if order is not None and len(order) == len(prog_small):
+        sched = sched.with_order(order)
+    fn = fa_ops.build(sched, **static)
+    rng = np.random.default_rng(0)
+    q = rng.standard_normal((1, 4, 256, 64)).astype(np.float32)
+    k = rng.standard_normal((1, 4, 256, 64)).astype(np.float32)
+    v = rng.standard_normal((1, 4, 256, 64)).astype(np.float32)
+    err = float(np.max(np.abs(np.asarray(fn(q, k, v)) -
+                              np.asarray(fa_ref.attention(q, k, v,
+                                                          causal=False)))))
+    rows.append(("table2/attention_tuned_maxerr", err * 1e6,
+                 "tuned-schedule output vs oracle (x1e-6; shape 1,4,256,64)"))
+    return rows
+
+
+def listing_diff() -> str:
+    """Before/after schedule listing (paper Listings 4 vs 5 analogue)."""
+    res, program_for = _anneal(cooling=1.05)
+    prog = program_for(res.best)
+    base = prog.listing()
+    tuned = prog.listing(res.best.order)
+    return ("=== baseline (compiler-like) ===\n" + base +
+            "\n=== SIP-optimized ===\n" + tuned)
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")
+    print(listing_diff())

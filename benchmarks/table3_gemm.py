@@ -1,0 +1,69 @@
+"""Paper Table 3: fused GEMM + LeakyReLU, SIP vs baseline schedule.
+
+Paper setting: A100, fp16, (M, N, K) = (512, 512, 2048); SIP found a 12.27%
+lower-latency sass schedule.  Here the kernel is the Pallas GEMM and the
+energy is the TPU-v5e analytic cost model evaluated at the paper's exact
+shape (the cost model does not execute the kernel, so the full shape is
+cheap); probabilistic testing gates each step at a reduced shape.
+
+Two search modes are reported:
+  * paper-faithful  — order-only mutations (the paper's §3.1 space)
+  * beyond-paper    — order + BlockSpec tile knobs (TPU macro schedule)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import annealing, energy as energy_mod
+from repro.core.jit import TuneConfig
+from repro.core.mutation import MutationPolicy
+from repro.core.schedule import Schedule
+from repro.kernels.gemm_fused import ops as gemm_ops
+
+PAPER_SHAPE = dict(m=512, n=512, k=2048, dtype="bfloat16")
+PAPER_IMPROVEMENT = 0.1227          # Table 3: 26.91us -> 23.97us
+
+
+def _anneal(knob_prob: float, seed: int = 0, cooling: float = 1.01):
+    static = dict(PAPER_SHAPE)
+    space = gemm_ops.space(**static)
+    program_for = lambda s: gemm_ops.program_for(s, **static)
+    energy = energy_mod.CostModelEnergy(program_for)
+    policy = MutationPolicy(space=space, program_for=program_for,
+                            knob_prob=knob_prob)
+    x0 = Schedule(knobs=space.default_knobs())
+    return annealing.anneal(x0, energy, policy.propose, t_max=1.0,
+                            t_min=5e-3, cooling=cooling, seed=seed)
+
+
+def run(full: bool = True):
+    rows = []
+    res_f = _anneal(knob_prob=0.0, cooling=1.01 if full else 1.1)
+    rows.append(("table3/gemm_baseline_us", res_f.initial_raw * 1e6,
+                 "whole-kernel cost-model latency, default (compiler-like) schedule"))
+    rows.append(("table3/gemm_sip_faithful_us", res_f.best_raw * 1e6,
+                 f"improvement={res_f.improvement:.2%} "
+                 f"(paper: {PAPER_IMPROVEMENT:.2%}), evals={res_f.evals}"))
+    res_b = _anneal(knob_prob=0.25, cooling=1.01 if full else 1.1)
+    rows.append(("table3/gemm_sip_beyond_us", res_b.best_raw * 1e6,
+                 f"improvement={res_b.improvement:.2%} (order+tile knobs), "
+                 f"knobs={dict(res_b.best.knobs)}"))
+
+    # correctness: tuned schedule passes probabilistic testing end to end
+    x = np.random.default_rng(0).standard_normal((64, 128)).astype(np.float32)
+    w = np.random.default_rng(1).standard_normal((128, 64)).astype(np.float32)
+    results = gemm_ops.gemm_leaky_relu.tune(
+        [x, w], TuneConfig(rounds=1, t_min=0.2, cooling=1.2,
+                           step_samples=1, final_samples=16))
+    ent = gemm_ops.gemm_leaky_relu.cache.entries(
+        gemm_ops.NAME, gemm_ops.gemm_leaky_relu.sig_str(
+            gemm_ops.gemm_leaky_relu.static_of(x, w)))
+    rows.append(("table3/gemm_tested_deploy_us", results[0].best_raw * 1e6,
+                 f"tests_passed={all(e.tests_passed for e in ent)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.3f},{derived}")

@@ -1,0 +1,47 @@
+"""Quickstart: autotune a fused GEMM+LeakyReLU kernel with SIP, end to end.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+This is the paper's Listing 2 workflow: take a kernel, run the offline
+stochastic search (simulated annealing over dependency-legal instruction
+reorderings, probabilistically tested against the oracle at every step),
+persist the best schedule, and deploy with zero runtime overhead.
+"""
+
+import numpy as np
+
+from repro.core import ScheduleCache
+from repro.core.jit import TuneConfig
+from repro.kernels.gemm_fused import ops as gemm_ops
+from repro.kernels.gemm_fused import ref
+
+
+def main() -> None:
+    # a persistent cache — deployment reloads tuned schedules from here
+    kernel = gemm_ops.make(cache=ScheduleCache("/tmp/sip_cache.json"))
+
+    x = np.random.default_rng(0).standard_normal((128, 256)).astype(np.float32)
+    w = np.random.default_rng(1).standard_normal((256, 128)).astype(np.float32)
+
+    # 1. baseline: compiler-like schedule
+    y0 = kernel(x, w)
+    assert np.allclose(y0, ref.gemm_leaky_relu(x, w), atol=1e-4)
+    print("baseline schedule runs and is correct")
+
+    # 2. offline SIP search (paper Alg. 1 + §4.2 testing), two rounds
+    results = kernel.tune([x, w],
+                          TuneConfig(rounds=2, cooling=1.05, t_min=0.05,
+                                     step_samples=2, final_samples=32),
+                          verbose=True)
+    best = min(results, key=lambda r: r.best_raw)
+    print(f"SIP improvement: {best.improvement:.2%} "
+          f"({best.evals} schedules evaluated)")
+
+    # 3. deployment: the tuned schedule loads from the cache transparently
+    y1 = kernel(x, w)
+    assert np.allclose(y1, ref.gemm_leaky_relu(x, w), atol=1e-4)
+    print("tuned schedule deployed from cache and is correct")
+
+
+if __name__ == "__main__":
+    main()

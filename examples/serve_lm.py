@@ -1,0 +1,56 @@
+"""Serve a small LM with batched requests through the production engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Demonstrates: batched prefill -> greedy decode with a preallocated KV cache,
+per-request EOS handling, throughput stats, and (via --use-pallas) routing
+the prefill through the SIP-tunable Pallas flash-attention kernel.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+from repro.serve.engine import Engine, ServeConfig
+
+CFG = ModelConfig(
+    name="serve-demo", family="dense", n_layers=4, d_model=256, n_heads=8,
+    n_kv_heads=4, d_ff=512, vocab=8_000, dtype="float32",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--new-tokens", type=int, default=48)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--use-pallas", action="store_true")
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(CFG, use_pallas=args.use_pallas)
+    params = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+    eng = Engine(params, cfg,
+                 ServeConfig(max_len=args.prompt_len + args.new_tokens,
+                             temperature=args.temperature))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    out = eng.generate(prompts, args.new_tokens)
+    print(f"[serve] batch={args.batch} prompt={args.prompt_len} "
+          f"generated={out.shape[1]} tokens/request")
+    print(f"[serve] prefill {eng.stats['prefill_s']:.2f}s, decode "
+          f"{eng.stats['tokens_out'] / max(eng.stats['decode_s'], 1e-9):.1f} tok/s")
+    for i in range(min(3, args.batch)):
+        print(f"  req{i}: ...{prompts[i, -5:].tolist()} -> "
+              f"{out[i, :10].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end driver: train a ~100M-parameter qwen3-family LM with the full
+production stack (data pipeline, AdamW, checkpoint/restart, FT heartbeats).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+
+~100M params (12L, d=768, vocab 32k) — a few hundred steps on CPU takes tens
+of minutes; pass --steps 20 for a fast sanity run.  Kill it mid-run and
+relaunch: it resumes from the newest verified checkpoint, and the stateless
+data pipeline guarantees the resumed trajectory is bit-identical to an
+uninterrupted one (tested in tests/test_steps_and_loop.py).
+"""
+
+import argparse
+import dataclasses
+
+from repro.data.pipeline import DataConfig
+from repro.ft.manager import FTManager
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train.loop import TrainConfig, train
+
+CFG_100M = ModelConfig(
+    name="lm-100m", family="dense", n_layers=12, d_model=768, n_heads=12,
+    n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32_000, qk_norm=True,
+    dtype="float32", param_dtype="float32",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm100m")
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    n_params = (cfg.vocab * cfg.d_model * 2 +
+                cfg.n_layers * (cfg.d_model * (cfg.n_heads + 2 * cfg.n_kv_heads)
+                                * cfg.hd + cfg.n_heads * cfg.hd * cfg.d_model +
+                                3 * cfg.d_model * cfg.d_ff))
+    print(f"[example] ~{n_params / 1e6:.0f}M params")
+
+    dcfg = DataConfig(global_batch=args.batch, seq_len=args.seq,
+                      vocab=cfg.vocab)
+    tcfg = TrainConfig(total_steps=args.steps, ckpt_every=50,
+                       ckpt_dir=args.ckpt_dir, log_every=10)
+    ocfg = adamw.OptConfig(peak_lr=3e-4, warmup_steps=20,
+                           decay_steps=args.steps)
+    ft = FTManager(n_workers=1)
+    res = train(cfg, dcfg, tcfg, ocfg, ft=ft)
+    first, last = res["history"][0]["loss"], res["final_loss"]
+    print(f"[example] loss {first:.3f} -> {last:.3f} "
+          f"over {len(res['history'])} steps")
+
+
+if __name__ == "__main__":
+    main()

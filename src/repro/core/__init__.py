@@ -1,0 +1,33 @@
+"""SIP core — the paper's contribution as a composable JAX-facing library.
+
+Public API:
+    ir.Program / ir.Instr / ir.Kind      — the mutable schedule artifact
+    schedule.Schedule / SearchSpace      — candidate representation
+    mutation.MutationPolicy              — §3.2 mutation policy
+    energy.{CostModelEnergy,WallClockEnergy,GuardedEnergy,reward}
+    annealing.anneal / multi_round       — Algorithm 1
+    testing.probabilistic_test           — §4.2
+    cache.ScheduleCache                  — §4.1 offline store + greedy rank
+    jit.sip_jit / SipKernel / TuneConfig — one-line integration
+    costmodel                            — TPU v5e constants + simulator
+"""
+
+from repro.core.annealing import AnnealResult, AnnealStep, anneal, multi_round
+from repro.core.cache import CacheEntry, ScheduleCache
+from repro.core.energy import CostModelEnergy, GuardedEnergy, WallClockEnergy, reward
+from repro.core.ir import Instr, Kind, Program
+from repro.core.jit import SipKernel, TuneConfig, sip_jit
+from repro.core.mutation import MutationPolicy
+from repro.core.schedule import KnobSpec, Schedule, SearchSpace
+from repro.core.testing import FaultInjector, InputSpec, TestReport, probabilistic_test
+
+__all__ = [
+    "AnnealResult", "AnnealStep", "anneal", "multi_round",
+    "CacheEntry", "ScheduleCache",
+    "CostModelEnergy", "GuardedEnergy", "WallClockEnergy", "reward",
+    "Instr", "Kind", "Program",
+    "SipKernel", "TuneConfig", "sip_jit",
+    "MutationPolicy",
+    "KnobSpec", "Schedule", "SearchSpace",
+    "FaultInjector", "InputSpec", "TestReport", "probabilistic_test",
+]

@@ -1,0 +1,118 @@
+"""Simulated annealing for Stochastic Instruction Perturbation (paper Alg. 1).
+
+Faithful transcription:
+
+    1:  Initialize T_max, T_min, x
+    2:  x_best <- x
+    3:  T <- T_max
+    4:  while T > T_min do
+    5:      x' <- perturb(x)
+    6:      dE = Energy(x') - Energy(x)
+    7:      if dE < 0:  x <- x';  if Energy(x) < Energy(x_best): x_best <- x
+    13:     elif r < exp(-dE/T):  x <- x'
+    17:     T <- T * L^-1
+    19: return x_best
+
+Energies are normalized by the initial runtime T_0 so that the temperature
+scale is shape-independent; the paper's reward R = (T_{i-1}-T_i)/T_0 is then
+exactly -dE and is recorded per step in the history.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import numpy as np
+
+from repro.core.schedule import Schedule
+
+
+@dataclasses.dataclass
+class AnnealStep:
+    step: int
+    temperature: float
+    energy: float          # normalized candidate energy (T_i / T_0)
+    reward: float          # paper Eq. (1)
+    accepted: bool
+    best_energy: float
+
+
+@dataclasses.dataclass
+class AnnealResult:
+    best: Schedule
+    best_energy: float     # normalized
+    best_raw: float        # seconds
+    initial_raw: float     # T_0, seconds
+    history: list[AnnealStep]
+    evals: int
+
+    @property
+    def improvement(self) -> float:
+        """Fractional runtime reduction vs the unmutated schedule."""
+        if not math.isfinite(self.best_raw) or self.initial_raw == 0:
+            return 0.0
+        return (self.initial_raw - self.best_raw) / self.initial_raw
+
+
+def anneal(x0: Schedule,
+           energy: Callable[[Schedule], float],
+           perturb: Callable[[Schedule, np.random.Generator], Schedule | None],
+           *,
+           t_max: float = 1.0,
+           t_min: float = 1e-3,
+           cooling: float = 1.05,          # the paper's L:  T <- T * L^-1
+           seed: int = 0,
+           on_step: Callable[[AnnealStep], None] | None = None) -> AnnealResult:
+    rng = np.random.default_rng(seed)
+    t0_raw = energy(x0)
+    if not math.isfinite(t0_raw) or t0_raw <= 0:
+        raise ValueError("initial schedule must be runnable (finite positive energy)")
+
+    def norm(e_raw: float) -> float:
+        return e_raw / t0_raw if math.isfinite(e_raw) else float("inf")
+
+    x, e_x = x0, 1.0
+    x_best, e_best, raw_best = x0, 1.0, t0_raw
+    history: list[AnnealStep] = []
+    evals = 1
+    T = t_max
+    step = 0
+    while T > t_min:
+        cand = perturb(x, rng)
+        if cand is None:                   # no legal action from x
+            T /= cooling
+            step += 1
+            continue
+        e_raw = energy(cand)
+        evals += 1
+        e_c = norm(e_raw)
+        dE = e_c - e_x
+        accepted = False
+        if dE < 0:
+            x, e_x = cand, e_c
+            accepted = True
+            if e_c < e_best:
+                x_best, e_best, raw_best = cand, e_c, e_raw
+        elif math.isfinite(dE) and rng.random() < math.exp(-dE / T):
+            x, e_x = cand, e_c
+            accepted = True
+        rec = AnnealStep(step=step, temperature=T, energy=e_c,
+                         reward=-dE if math.isfinite(dE) else 0.0,
+                         accepted=accepted, best_energy=e_best)
+        history.append(rec)
+        if on_step is not None:
+            on_step(rec)
+        T /= cooling
+        step += 1
+    return AnnealResult(best=x_best, best_energy=e_best, best_raw=raw_best,
+                        initial_raw=t0_raw, history=history, evals=evals)
+
+
+def multi_round(x0: Schedule, energy, perturb, *, rounds: int = 4,
+                seed: int = 0, **kw) -> list[AnnealResult]:
+    """§4.1: "SIP is expected to perform offline searches and store results
+    from multiple rounds of searches" — independent restarts, greedily ranked
+    by the caller (see core.cache)."""
+    return [anneal(x0, energy, perturb, seed=seed + r, **kw) for r in range(rounds)]

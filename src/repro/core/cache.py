@@ -1,0 +1,95 @@
+"""Offline schedule store (paper §4.1).
+
+"SIP is expected to perform offline searches and store results from multiple
+rounds of searches.  Then it applies a greedy algorithm to rank all found
+cubin and picks the best one if it passes all tests.  Finally, at deployment,
+the best cubin is retrieved and loaded directly without incurring any runtime
+overhead."
+
+Entries are keyed by (kernel_name, signature) where signature encodes the
+input shapes/dtypes and the hardware target — the analogue of one compiled
+cubin per launch configuration.  Storage is a single JSON file with atomic
+replace so concurrent searches do not corrupt it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import threading
+from typing import Any
+
+from repro.core.schedule import Schedule
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    schedule_json: str
+    energy: float              # seconds (raw)
+    tests_passed: bool
+    test_samples: int
+    round_id: int
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "CacheEntry":
+        return CacheEntry(**d)
+
+
+class ScheduleCache:
+    def __init__(self, path: str | None = None):
+        self.path = path
+        self._lock = threading.Lock()
+        self._data: dict[str, list[dict]] = {}
+        if path and os.path.exists(path):
+            with open(path) as f:
+                self._data = json.load(f)
+
+    @staticmethod
+    def key(kernel_name: str, signature: str) -> str:
+        return f"{kernel_name}::{signature}"
+
+    def put(self, kernel_name: str, signature: str, schedule: Schedule,
+            energy: float, tests_passed: bool, test_samples: int = 0,
+            round_id: int = 0, **meta: Any) -> None:
+        entry = CacheEntry(schedule_json=schedule.to_json(), energy=energy,
+                           tests_passed=tests_passed, test_samples=test_samples,
+                           round_id=round_id, meta=meta)
+        with self._lock:
+            self._data.setdefault(self.key(kernel_name, signature), []).append(entry.to_dict())
+            self._flush()
+
+    def best(self, kernel_name: str, signature: str) -> Schedule | None:
+        """Greedy rank: among all rounds, the lowest-energy entry that passed
+        all tests (paper §4.1)."""
+        entries = [CacheEntry.from_dict(d)
+                   for d in self._data.get(self.key(kernel_name, signature), [])]
+        passing = [e for e in entries if e.tests_passed]
+        if not passing:
+            return None
+        best = min(passing, key=lambda e: e.energy)
+        return Schedule.from_json(best.schedule_json)
+
+    def entries(self, kernel_name: str, signature: str) -> list[CacheEntry]:
+        return [CacheEntry.from_dict(d)
+                for d in self._data.get(self.key(kernel_name, signature), [])]
+
+    def _flush(self) -> None:
+        if not self.path:
+            return
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".sipcache")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise

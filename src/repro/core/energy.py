@@ -1,0 +1,118 @@
+"""Feedback signal (paper §3.3).
+
+Energy(x) is the (estimated or measured) runtime of schedule x.  The paper's
+reward is ``R = (T_{i-1} - T_i) / T_0`` — positive when a mutation speeds the
+kernel up.  The annealer works directly on energies; :func:`reward` is kept
+for logging/parity with the paper.
+
+Two energy backends:
+
+* :class:`CostModelEnergy` — the two-pipe TPU latency simulator
+  (:mod:`repro.core.costmodel`).  Deterministic, instant, and meaningful for
+  the TPU target even inside this CPU-only container (DESIGN.md §2 records
+  why this deviation from the paper is justified on TPU).
+* :class:`WallClockEnergy` — compile-and-measure, the paper's choice.  Used
+  for the paper-dynamics reproduction and wherever a real device exists.
+
+A candidate that fails probabilistic testing gets energy = +inf (the paper's
+"0 feedback signal" — the schedule can never be accepted as an improvement).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.ir import Program
+from repro.core.schedule import Schedule
+
+FAILED = float("inf")
+
+
+def reward(t_prev: float, t_cur: float, t0: float) -> float:
+    """Paper Eq. (1): R = (T_{i-1} - T_i) / T_0."""
+    if not np.isfinite(t_cur):
+        return 0.0          # §4.2: failed test => 0 feedback
+    return (t_prev - t_cur) / t0
+
+
+@dataclasses.dataclass
+class CostModelEnergy:
+    """Energy from the analytic schedule simulator."""
+
+    program_for: Callable[[Schedule], Program]
+    machine: costmodel.Machine = costmodel.V5E
+
+    def __call__(self, schedule: Schedule) -> float:
+        program = self.program_for(schedule)
+        return costmodel.simulate(program, schedule.resolve_order(program), self.machine)
+
+
+@dataclasses.dataclass
+class WallClockEnergy:
+    """Energy from measured execution (CUDA-events analogue: timed jit calls).
+
+    ``build(schedule)`` returns a callable taking ``*args``; ``make_args()``
+    returns the positional inputs.  We warm up (compile + cache) then take the
+    median of ``iters`` timed calls, blocking on the result.
+    """
+
+    build: Callable[[Schedule], Callable[..., Any]]
+    make_args: Callable[[], Sequence[Any]]
+    warmup: int = 2
+    iters: int = 5
+
+    def __call__(self, schedule: Schedule) -> float:
+        try:
+            fn = self.build(schedule)
+            args = self.make_args()
+            for _ in range(self.warmup):
+                out = fn(*args)
+            _block(out)
+            times = []
+            for _ in range(self.iters):
+                t0 = time.perf_counter()
+                out = fn(*args)
+                _block(out)
+                times.append(time.perf_counter() - t0)
+            return float(np.median(times))
+        except Exception:
+            return FAILED   # unassemblable schedule (paper: cuasm failure)
+
+
+def _block(out: Any) -> None:
+    for leaf in _leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def _leaves(x: Any):
+    if isinstance(x, (list, tuple)):
+        for v in x:
+            yield from _leaves(v)
+    elif isinstance(x, dict):
+        for v in x.values():
+            yield from _leaves(v)
+    else:
+        yield x
+
+
+@dataclasses.dataclass
+class GuardedEnergy:
+    """Energy guarded by probabilistic testing (paper §4.2).
+
+    The test gate runs BEFORE timing: an incorrect kernel gets FAILED energy
+    and thus zero reward, exactly as in the paper.
+    """
+
+    energy: Callable[[Schedule], float]
+    test: Callable[[Schedule], bool]
+
+    def __call__(self, schedule: Schedule) -> float:
+        if not self.test(schedule):
+            return FAILED
+        return self.energy(schedule)

@@ -1,0 +1,49 @@
+"""Beyond-paper search upgrade: cost-model-guided mutation.
+
+The paper's §6 notes simulated annealing "is unable to explore the search
+space efficiently" and suggests better search as future work.  On TPU the
+analytic cost model is cheap enough to evaluate EVERY legal ±1 action at a
+state, which enables an epsilon-greedy proposal: with probability
+``greed`` propose the best-scoring legal action, otherwise fall back to the
+paper's uniform action.  Acceptance stays Metropolis (Alg. 1), so the
+stationary behaviour is preserved while convergence accelerates — measured
+in benchmarks/guided_search.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import costmodel
+from repro.core.ir import Program
+from repro.core.mutation import MutationPolicy
+from repro.core.schedule import Schedule
+
+
+@dataclasses.dataclass
+class GuidedMutationPolicy(MutationPolicy):
+    greed: float = 0.5
+    machine: costmodel.Machine = costmodel.V5E
+
+    def propose(self, schedule: Schedule, rng: np.random.Generator) -> Schedule | None:
+        # greed<=0 degenerates to the paper's policy exactly (same rng stream)
+        if self.greed <= 0 or rng.random() >= self.greed:
+            return super().propose(schedule, rng)
+        program: Program = self.program_for(schedule)
+        order = schedule.resolve_order(program)
+        moves = program.legal_moves(order)
+        if not moves:
+            return super().propose(schedule, rng)
+        best_order, best_t = None, float("inf")
+        for idx, direction in moves:
+            cand = program.move(order, idx, direction)
+            if cand is None:
+                continue
+            t = costmodel.simulate(program, cand, self.machine)
+            if t < best_t:
+                best_order, best_t = cand, t
+        if best_order is None or best_order == tuple(order):
+            return super().propose(schedule, rng)
+        return schedule.with_order(best_order)

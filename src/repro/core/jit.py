@@ -1,0 +1,162 @@
+"""``@sip_jit`` — one-line integration (paper §4.1, Listing 2).
+
+The paper decorates a Triton kernel; the cubin is intercepted, searched
+offline, and the best test-passing cubin is loaded at deployment with zero
+runtime overhead.  Here the decorated object is a *schedule-parameterized
+kernel factory* (each kernel's ``ops.py``), and the cached artifact is a
+:class:`~repro.core.schedule.Schedule` instead of a patched binary — the
+factory deterministically rebuilds the optimized kernel from it.
+
+    gemm = sip_jit(name="gemm_fused", build=build, program_for=make_program,
+                   space_for=space, oracle=ref, signature_fn=sig)(...)
+    gemm.tune(example_args, TuneConfig(...))   # offline
+    y = gemm(x, w)                             # deployment: cached schedule
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from repro.core import annealing, energy as energy_mod, testing
+from repro.core.cache import ScheduleCache
+from repro.core.ir import Program
+from repro.core.mutation import MutationPolicy
+from repro.core.schedule import Schedule, SearchSpace
+
+
+@dataclasses.dataclass
+class TuneConfig:
+    rounds: int = 2               # §4.1: multiple offline rounds, greedy rank
+    t_max: float = 1.0
+    t_min: float = 0.02
+    cooling: float = 1.05         # L in Alg. 1
+    seed: int = 0
+    energy: str = "costmodel"     # "costmodel" (TPU-analytic) | "wallclock"
+    knob_prob: float = 0.0        # 0 == paper-faithful (order-only mutations)
+    step_samples: int = 2         # probabilistic tests per search step (§4.2)
+    final_samples: int = 64       # tests on the final best before caching
+    rtol: float = 2e-2
+    atol: float = 2e-2
+
+
+class SipKernel:
+    """A kernel whose schedule is SIP-tunable and cache-backed."""
+
+    def __init__(self, *, name: str,
+                 build: Callable[..., Callable[..., Any]],
+                 program_for: Callable[..., Program],
+                 space_for: Callable[..., SearchSpace],
+                 oracle: Callable[..., Any],
+                 signature_fn: Callable[..., dict[str, Any]],
+                 cache: ScheduleCache | None = None):
+        self.name = name
+        self._build = build              # build(schedule, **static) -> callable
+        self._program_for = program_for  # program_for(schedule, **static) -> Program
+        self._space_for = space_for      # space_for(**static) -> SearchSpace
+        self.oracle = oracle
+        self._signature_fn = signature_fn
+        self.cache = cache or ScheduleCache()
+        self._built: dict[tuple[str, str], Callable[..., Any]] = {}
+        self._resolved: dict[str, Callable[..., Any]] = {}
+
+    # ------------------------------------------------------------- plumbing
+    def static_of(self, *args: Any) -> dict[str, Any]:
+        return self._signature_fn(*args)
+
+    @staticmethod
+    def sig_str(static: dict[str, Any]) -> str:
+        return json.dumps(static, sort_keys=True)
+
+    def default_schedule(self, static: dict[str, Any]) -> Schedule:
+        space = self._space_for(**static)
+        return Schedule(knobs=space.default_knobs())
+
+    def schedule_for(self, static: dict[str, Any]) -> Schedule:
+        cached = self.cache.best(self.name, self.sig_str(static))
+        return cached if cached is not None else self.default_schedule(static)
+
+    # ------------------------------------------------------------ deployment
+    def __call__(self, *args: Any) -> Any:
+        static = self.static_of(*args)
+        sig = self.sig_str(static)
+        fn = self._resolved.get(sig)         # steady state: one dict lookup
+        if fn is None:
+            sched = self.schedule_for(static)
+            key = (sig, sched.signature())
+            fn = self._built.get(key)
+            if fn is None:
+                fn = self._build(sched, **static)
+                self._built[key] = fn
+            self._resolved[sig] = fn
+        return fn(*args)
+
+    # ---------------------------------------------------------------- tuning
+    def tune(self, example_args: Sequence[Any], config: TuneConfig = TuneConfig(),
+             verbose: bool = False) -> list[annealing.AnnealResult]:
+        static = self.static_of(*example_args)
+        sig = self.sig_str(static)
+        space = self._space_for(**static)
+        specs = [testing.InputSpec(tuple(a.shape), a.dtype) for a in example_args]
+        rng = np.random.default_rng(config.seed + 10_000)
+
+        def program_for(s: Schedule) -> Program:
+            return self._program_for(s, **static)
+
+        def step_test(s: Schedule) -> bool:
+            if config.step_samples <= 0:
+                return True
+            fn = self._build(s, **static)
+            rep = testing.probabilistic_test(fn, self.oracle, specs,
+                                             config.step_samples, rng,
+                                             rtol=config.rtol, atol=config.atol)
+            return rep.passed
+
+        if config.energy == "costmodel":
+            base = energy_mod.CostModelEnergy(program_for)
+        elif config.energy == "wallclock":
+            base = energy_mod.WallClockEnergy(
+                build=lambda s: self._build(s, **static),
+                make_args=lambda: [sp.sample(rng) for sp in specs])
+        else:
+            raise ValueError(config.energy)
+        guarded = energy_mod.GuardedEnergy(base, step_test)
+        policy = MutationPolicy(space=space, program_for=program_for,
+                                knob_prob=config.knob_prob)
+        x0 = self.default_schedule(static)
+
+        results = []
+        for r in range(config.rounds):
+            res = annealing.anneal(
+                x0, guarded, policy.propose,
+                t_max=config.t_max, t_min=config.t_min,
+                cooling=config.cooling, seed=config.seed + r)
+            results.append(res)
+            # final, heavier probabilistic test before the entry may be ranked
+            fn = self._build(res.best, **static)
+            rep = testing.probabilistic_test(fn, self.oracle, specs,
+                                             config.final_samples, rng,
+                                             rtol=config.rtol, atol=config.atol)
+            self.cache.put(self.name, sig, res.best, energy=res.best_raw,
+                           tests_passed=rep.passed, test_samples=rep.samples_run,
+                           round_id=r, improvement=res.improvement,
+                           evals=res.evals)
+            self._resolved.pop(sig, None)    # new entries re-resolve on call
+            if verbose:
+                print(f"[sip:{self.name}] round {r}: best={res.best_raw:.3e}s "
+                      f"improvement={res.improvement:+.2%} tests="
+                      f"{'PASS' if rep.passed else 'FAIL'}({rep.samples_run})")
+        return results
+
+
+def sip_jit(**kwargs: Any) -> Callable[[Callable[..., Any]], SipKernel]:
+    """Decorator form: ``@sip_jit(name=..., program_for=..., ...)`` over the
+    kernel factory ``build(schedule, **static)`` (Listing 2 analogue)."""
+
+    def wrap(build: Callable[..., Any]) -> SipKernel:
+        return SipKernel(build=build, **kwargs)
+
+    return wrap

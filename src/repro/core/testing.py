@@ -1,0 +1,98 @@
+"""Automatic probabilistic testing (paper §4.2).
+
+Validation (theorem proving) is impossible for closed-semantics native code;
+the paper instead draws random reference inputs, runs the *unmutated* kernel
+to produce reference outputs, and rejects any mutated kernel whose outputs
+mismatch.  We reproduce that contract: the oracle is the kernel's ``ref.py``
+pure-jnp implementation (equivalently the unmutated kernel — tests assert the
+two agree), inputs are drawn from the kernel's input specs, and a mismatch
+anywhere in ``n_samples`` trials fails the candidate.
+
+``FaultInjector`` supports the paper's Fig. 2 experiment (test samples vs
+false positives): it wraps a correct kernel with a data-dependent fault that
+only fires on rare inputs, so small sample counts let the broken kernel
+through — exactly the false-positive mechanism the figure studies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class InputSpec:
+    shape: tuple[int, ...]
+    dtype: Any = np.float32
+    scale: float = 1.0
+
+    def sample(self, rng: np.random.Generator) -> np.ndarray:
+        x = rng.standard_normal(self.shape).astype(np.float32) * self.scale
+        return x.astype(self.dtype)
+
+
+@dataclasses.dataclass
+class TestReport:
+    passed: bool
+    samples_run: int
+    first_failure: int | None = None
+    max_err: float = 0.0
+
+
+def probabilistic_test(candidate: Callable[..., Any],
+                       oracle: Callable[..., Any],
+                       specs: Sequence[InputSpec],
+                       n_samples: int,
+                       rng: np.random.Generator,
+                       rtol: float = 2e-2,
+                       atol: float = 2e-2,
+                       batch: int = 16) -> TestReport:
+    """Run up to ``n_samples`` random trials; stop at the first mismatch.
+
+    ``batch`` draws that many input sets per outer loop purely to amortize
+    dispatch; semantics match one-at-a-time testing.
+    """
+    max_err = 0.0
+    done = 0
+    while done < n_samples:
+        todo = min(batch, n_samples - done)
+        for _ in range(todo):
+            args = [s.sample(rng) for s in specs]
+            got = np.asarray(candidate(*args))
+            want = np.asarray(oracle(*args))
+            err = _rel_err(got, want)
+            max_err = max(max_err, err)
+            ok = np.allclose(got, want, rtol=rtol, atol=atol)
+            done += 1
+            if not ok:
+                return TestReport(False, done, first_failure=done, max_err=max_err)
+    return TestReport(True, done, max_err=max_err)
+
+
+def _rel_err(got: np.ndarray, want: np.ndarray) -> float:
+    denom = np.maximum(np.abs(want), 1e-6)
+    return float(np.max(np.abs(got - want) / denom))
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Wrap ``fn`` with a fault that fires only when an input statistic
+    exceeds ``threshold`` — a stand-in for a subtly-miscompiled schedule whose
+    bug only manifests on rare data (Fig. 2's false-positive kernels).
+
+    ``fire_prob`` is the per-sample probability that standard-normal inputs
+    trip the threshold; it is determined by ``threshold`` and the input size.
+    """
+
+    fn: Callable[..., Any]
+    threshold: float
+    corruption: float = 1e-2
+
+    def __call__(self, *args: Any) -> Any:
+        out = np.asarray(self.fn(*args))
+        stat = max(float(np.max(np.abs(np.asarray(a)))) for a in args)
+        if stat > self.threshold:
+            out = out + self.corruption * np.sign(out)   # silent corruption
+        return out

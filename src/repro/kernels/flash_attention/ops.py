@@ -1,0 +1,74 @@
+"""jit'd wrapper + SIP integration for the fused attention kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jit import SipKernel
+from repro.core.schedule import KnobSpec, Schedule, SearchSpace
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention import ref
+
+
+def _choices(dim: int, prefs: tuple[int, ...]) -> tuple[int, ...]:
+    ch = tuple(c for c in prefs if dim % c == 0 and c <= dim)
+    return ch or (dim,)
+
+
+def space(*, b, hq, hkv, sq, skv, d, causal, window, dtype="float32") -> SearchSpace:
+    bks = _choices(skv, (256, 512, 128, 64, 32, 16, 8))
+    return SearchSpace(knobs=(
+        KnobSpec("bq", _choices(sq, (256, 512, 128, 64, 32, 16, 8, 1))),
+        KnobSpec("bk", bks),
+        KnobSpec("n_chunks", tuple(c for c in (2, 4, 1) if bks[0] % c == 0)),
+    ))
+
+
+def _knobs(schedule: Schedule, **static):
+    sp = space(**static)
+    d = sp.default_knobs()
+    d.update(schedule.knobs)
+    return d["bq"], d["bk"], d["n_chunks"]
+
+
+def program_for(schedule: Schedule, **static):
+    bq, bk, n_chunks = _knobs(schedule, **static)
+    return K.make_program(bq=bq, bk=bk, n_chunks=n_chunks, d=static["d"],
+                          sq=static["sq"], skv=static["skv"],
+                          causal=static["causal"], window=static["window"],
+                          dtype=jnp.dtype(static["dtype"]),
+                          batch_heads=static["b"] * static["hq"])
+
+
+def build(schedule: Schedule, **static):
+    bq, bk, n_chunks = _knobs(schedule, **static)
+    program = program_for(schedule, **static)
+    order = schedule.resolve_order(program)
+    fn = functools.partial(K.pallas_attention, bq=bq, bk=bk, n_chunks=n_chunks,
+                           causal=static["causal"], window=static["window"],
+                           order=order)
+    return jax.jit(fn)
+
+
+def make(causal: bool = True, window: int | None = None, cache=None) -> SipKernel:
+    name = "flash_attention" + ("_causal" if causal else "") + \
+        (f"_w{window}" if window else "")
+
+    def signature_fn(q, k, v) -> dict:
+        b, hq, sq, d = q.shape
+        _, hkv, skv, _ = k.shape
+        return {"b": int(b), "hq": int(hq), "hkv": int(hkv), "sq": int(sq),
+                "skv": int(skv), "d": int(d), "causal": causal,
+                "window": window, "dtype": str(jnp.dtype(q.dtype))}
+
+    oracle = functools.partial(ref.attention, causal=causal, window=window)
+    return SipKernel(name=name, build=build, program_for=program_for,
+                     space_for=space, oracle=oracle,
+                     signature_fn=signature_fn, cache=cache)
+
+
+flash_attention = make(causal=True)
+flash_attention_bidir = make(causal=False)

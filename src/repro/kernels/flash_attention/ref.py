@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for fused attention (paper Table 2 workload).
+
+Supports GQA (kv heads broadcast over query-head groups), causal masking and
+sliding-window masking — the variants the assigned architectures need.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int | None = None) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  Returns (B, Hq, Sq, D)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    qf = q.astype(jnp.float32) * (d ** -0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf)
+    rows = jnp.arange(sq)[:, None] + (skv - sq)   # right-aligned for decode
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vf) / jnp.maximum(l, 1e-30)
+    return o.astype(q.dtype)

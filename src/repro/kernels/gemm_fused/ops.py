@@ -1,0 +1,67 @@
+"""jit'd wrapper + SIP integration for the fused GEMM+LeakyReLU kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jit import SipKernel
+from repro.core.schedule import KnobSpec, Schedule, SearchSpace
+from repro.kernels.gemm_fused import kernel as K
+from repro.kernels.gemm_fused import ref
+
+NAME = "gemm_fused_leaky_relu"
+
+
+def _knob_choices(dim: int, prefs: tuple[int, ...]) -> tuple[int, ...]:
+    ch = tuple(c for c in prefs if dim % c == 0 and c <= dim)
+    return ch or (dim,)
+
+
+def space(*, m: int, n: int, k: int, dtype: str = "float32") -> SearchSpace:
+    return SearchSpace(knobs=(
+        KnobSpec("bm", _knob_choices(m, (128, 256, 512, 64, 32, 16, 8))),
+        KnobSpec("bn", _knob_choices(n, (128, 256, 512, 64, 32, 16, 8))),
+        KnobSpec("bk", _knob_choices(k, (128, 256, 512, 64, 32, 16, 8))),
+    ))
+
+
+def _blocks(schedule: Schedule, m: int, n: int, k: int, dtype: str):
+    sp = space(m=m, n=n, k=k, dtype=dtype)
+    d = sp.default_knobs()
+    d.update(schedule.knobs)
+    return d["bm"], d["bn"], d["bk"]
+
+
+def program_for(schedule: Schedule, *, m: int, n: int, k: int,
+                dtype: str = "float32"):
+    bm, bn, bk = _blocks(schedule, m, n, k, dtype)
+    return K.make_program(m=m, n=n, k=k, bm=bm, bn=bn, bk=bk,
+                          dtype=jnp.dtype(dtype))
+
+
+def build(schedule: Schedule, *, m: int, n: int, k: int,
+          dtype: str = "float32"):
+    bm, bn, bk = _blocks(schedule, m, n, k, dtype)
+    program = program_for(schedule, m=m, n=n, k=k, dtype=dtype)
+    order = schedule.resolve_order(program)
+    fn = functools.partial(K.pallas_gemm_leaky_relu, bm=bm, bn=bn, bk=bk,
+                           order=order)
+    return jax.jit(fn)
+
+
+def signature_fn(x, w) -> dict:
+    (m, k), (_, n) = x.shape, w.shape
+    return {"m": int(m), "n": int(n), "k": int(k), "dtype": str(jnp.dtype(x.dtype))}
+
+
+def make(cache=None) -> SipKernel:
+    return SipKernel(name=NAME, build=build, program_for=program_for,
+                     space_for=space, oracle=ref.gemm_leaky_relu,
+                     signature_fn=signature_fn, cache=cache)
+
+
+# module-level kernel instance (in-memory cache; launchers pass a persistent one)
+gemm_leaky_relu = make()

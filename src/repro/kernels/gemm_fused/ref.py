@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for fused GEMM + LeakyReLU (paper Table 3 workload)."""
+
+import jax.numpy as jnp
+
+ALPHA = 0.01
+
+
+def gemm_leaky_relu(x: jnp.ndarray, w: jnp.ndarray, alpha: float = ALPHA) -> jnp.ndarray:
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    y = jnp.where(y >= 0, y, alpha * y)
+    return y.astype(x.dtype)

@@ -1,0 +1,63 @@
+"""jit'd wrapper + SIP integration for the fused RMSNorm kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jit import SipKernel
+from repro.core.schedule import KnobSpec, Schedule, SearchSpace
+from repro.kernels.rmsnorm import kernel as K
+from repro.kernels.rmsnorm import ref
+
+NAME = "rmsnorm_fused"
+
+
+def _choices(dim: int, prefs) -> tuple[int, ...]:
+    ch = tuple(c for c in prefs if dim % c == 0 and c <= dim)
+    return ch or (dim,)
+
+
+def space(*, rows: int, d: int, dtype: str = "float32") -> SearchSpace:
+    return SearchSpace(knobs=(
+        KnobSpec("br", _choices(rows, (256, 512, 128, 64, 32, 16, 8, 1))),
+        KnobSpec("n_chunks", _choices(d, (4, 2, 8, 1))),
+    ))
+
+
+def _knobs(schedule: Schedule, **static):
+    sp = space(**static)
+    d = sp.default_knobs()
+    d.update(schedule.knobs)
+    return d["br"], d["n_chunks"]
+
+
+def program_for(schedule: Schedule, **static):
+    br, n_chunks = _knobs(schedule, **static)
+    return K.make_program(br=br, d=static["d"], n_chunks=n_chunks,
+                          dtype=jnp.dtype(static["dtype"]),
+                          rows=static["rows"])
+
+
+def build(schedule: Schedule, **static):
+    br, n_chunks = _knobs(schedule, **static)
+    program = program_for(schedule, **static)
+    order = schedule.resolve_order(program)
+    return jax.jit(functools.partial(K.pallas_rmsnorm, br=br,
+                                     n_chunks=n_chunks, order=order))
+
+
+def signature_fn(x, gamma) -> dict:
+    rows, d = x.shape
+    return {"rows": int(rows), "d": int(d), "dtype": str(jnp.dtype(x.dtype))}
+
+
+def make(cache=None) -> SipKernel:
+    return SipKernel(name=NAME, build=build, program_for=program_for,
+                     space_for=space, oracle=ref.rmsnorm,
+                     signature_fn=signature_fn, cache=cache)
+
+
+rmsnorm = make()

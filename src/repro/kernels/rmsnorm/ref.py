@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for fused RMSNorm (scale)."""
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def rmsnorm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = EPS) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * (1.0 / jnp.sqrt(ms + eps)) * gamma.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,101 @@
+"""Chunked SSD (state-space dual) — the efficient O(S·Q + S·N·P) algorithm.
+
+Pure-JAX (differentiable, shardable under pjit); this is the production path
+used by the mamba2/zamba2 models for both train and serve.  The recurrent
+single-step form (`ssd_step`) drives decode with O(1) state.
+
+The paper's SIP technique applies at the kernel level (attention / GEMM);
+SSD here is substrate — see DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(la: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} la[..., k] (j<=i).
+
+    la: (..., Q) -> (..., Q, Q) lower-triangular log-decay matrix.
+    """
+    q = la.shape[-1]
+    cum = jnp.cumsum(la, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.arange(q)[:, None] >= jnp.arange(q)[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                *, chunk: int = 64,
+                init_state: jnp.ndarray | None = None,
+                return_state: bool = False):
+    """x: (Bt,S,H,P); dt: (Bt,S,H); A: (H,); B,C: (Bt,S,N); D: (H,).
+
+    Returns y (Bt,S,H,P) [and final state (Bt,H,N,P) if return_state].
+    """
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+    xr = x.astype(f32).reshape(bt, nc, chunk, h, p)
+    dtr = dt.astype(f32).reshape(bt, nc, chunk, h)
+    Br = B.astype(f32).reshape(bt, nc, chunk, n)
+    Cr = C.astype(f32).reshape(bt, nc, chunk, n)
+    la = dtr * A.astype(f32)[None, None, None, :]            # (b,c,q,h)
+    xb = xr * dtr[..., None]                                  # dt-weighted input
+
+    # ---- 1. intra-chunk (quadratic within chunk) ---------------------------
+    Lm = jnp.exp(segsum(jnp.moveaxis(la, -1, -2)))            # (b,c,h,q,q)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cr, Br)                # (b,c,q,q)
+    y_diag = jnp.einsum("bcij,bchij,bcjhp->bcihp", cb, Lm, xb)
+
+    # ---- 2. per-chunk final states -----------------------------------------
+    cum = jnp.cumsum(la, axis=2)                              # (b,c,q,h)
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                   # decay to chunk end
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Br, tail, xb)
+
+    # ---- 3. inter-chunk recurrence ------------------------------------------
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (b,c,h)
+    if init_state is None:
+        init_state = jnp.zeros((bt, h, n, p), f32)
+
+    def step(carry, inp):
+        st, dec = inp                                         # (b,h,n,p),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                     # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, init_state.astype(f32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)             # (b,c,h,n,p)
+
+    # ---- 4. state -> output contribution ------------------------------------
+    in_decay = jnp.exp(cum)                                    # decay from chunk start
+    y_off = jnp.einsum("bcin,bcih,bchnp->bcihp", Cr, in_decay, prev_states)
+
+    y = (y_diag + y_off).reshape(bt, s, h, p)
+    y = y + D.astype(f32)[None, None, :, None] * x.astype(f32)
+    if return_state:
+        return y, final
+    return y
+
+
+def ssd_step(state: jnp.ndarray, x_t: jnp.ndarray, dt_t: jnp.ndarray,
+             A: jnp.ndarray, B_t: jnp.ndarray, C_t: jnp.ndarray,
+             D: jnp.ndarray):
+    """One recurrent decode step.
+
+    state: (Bt,H,N,P); x_t: (Bt,H,P); dt_t: (Bt,H); B_t, C_t: (Bt,N).
+    Returns (new_state, y_t (Bt,H,P)).
+    """
+    f32 = jnp.float32
+    xf, dtf = x_t.astype(f32), dt_t.astype(f32)
+    dec = jnp.exp(dtf * A.astype(f32)[None, :])                      # (b,h)
+    upd = jnp.einsum("bn,bhp->bhnp", B_t.astype(f32), xf * dtf[..., None])
+    new_state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C_t.astype(f32), new_state)
+    y = y + D.astype(f32)[None, :, None] * xf
+    return new_state, y

@@ -1,0 +1,107 @@
+"""SIP integration + chunked-SSD assembly for the Pallas intra-chunk kernel.
+
+``ssd_chunked_pallas`` reproduces ops.ssd_chunked exactly, but computes the
+quadratic intra-chunk term with the Pallas kernel (kernel.py); the chunk
+states and inter-chunk recurrence stay in jnp (they are linear-cost)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jit import SipKernel
+from repro.core.schedule import Schedule, SearchSpace
+from repro.kernels.ssd import kernel as K
+from repro.kernels.ssd import ops as jops
+
+NAME = "ssd_intra_chunk"
+
+
+def space(**static) -> SearchSpace:
+    return SearchSpace()        # order-only (paper-faithful) space
+
+
+def program_for(schedule: Schedule, *, g, q, h, p, n, dtype="float32"):
+    return K.make_program(q=q, n=n, p=p, dtype=jnp.dtype(dtype), grid=g * h)
+
+
+def build(schedule: Schedule, *, g, q, h, p, n, dtype="float32"):
+    program = program_for(schedule, g=g, q=q, h=h, p=p, n=n, dtype=dtype)
+    order = schedule.resolve_order(program)
+    return jax.jit(functools.partial(K.pallas_ssd_intra, order=order))
+
+
+def signature_fn(xb, la, B, C) -> dict:
+    g, q, h, p = xb.shape
+    return {"g": int(g), "q": int(q), "h": int(h), "p": int(p),
+            "n": int(B.shape[-1]), "dtype": str(jnp.dtype(xb.dtype))}
+
+
+def _oracle(xb, la, B, C):
+    """Pure-jnp intra-chunk reference (the y_diag term of ops.ssd_chunked)."""
+    lam = jnp.moveaxis(la.astype(jnp.float32), -1, 1)      # (G, H, Q)
+    Lm = jnp.exp(jops.segsum(lam))
+    Lm = jnp.where(jnp.isfinite(Lm), Lm, 0.0)
+    cb = jnp.einsum("gin,gjn->gij", C.astype(jnp.float32),
+                    B.astype(jnp.float32))
+    return jnp.einsum("gij,ghij,gjhp->gihp", cb, Lm,
+                      xb.astype(jnp.float32)).astype(xb.dtype)
+
+
+def make(cache=None) -> SipKernel:
+    return SipKernel(name=NAME, build=build, program_for=program_for,
+                     space_for=space, oracle=_oracle,
+                     signature_fn=signature_fn, cache=cache)
+
+
+ssd_intra = make()
+
+
+def ssd_chunked_pallas(x, dt, A, B, C, D, *, chunk: int = 64,
+                       init_state=None, return_state: bool = False):
+    """ops.ssd_chunked with the intra-chunk term on the Pallas kernel."""
+    bt, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    f32 = jnp.float32
+    xr = x.astype(f32).reshape(bt * nc, chunk, h, p)
+    dtr = dt.astype(f32).reshape(bt * nc, chunk, h)
+    Br = B.astype(f32).reshape(bt * nc, chunk, n)
+    Cr = C.astype(f32).reshape(bt * nc, chunk, n)
+    la = dtr * A.astype(f32)[None, None, :]
+    xb = xr * dtr[..., None]
+
+    y_diag = ssd_intra(xb, la, Br, Cr).reshape(bt, nc, chunk, h, p)
+
+    # states + inter-chunk recurrence (identical to ops.ssd_chunked)
+    la_b = la.reshape(bt, nc, chunk, h)
+    xb_b = xb.reshape(bt, nc, chunk, h, p)
+    Br_b = Br.reshape(bt, nc, chunk, n)
+    Cr_b = Cr.reshape(bt, nc, chunk, n)
+    cum = jnp.cumsum(la_b, axis=2)
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Br_b, tail, xb_b)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+    if init_state is None:
+        init_state = jnp.zeros((bt, h, n, p), f32)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry
+
+    final, prev_states = jax.lax.scan(
+        step, init_state.astype(f32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)
+    in_decay = jnp.exp(cum)
+    y_off = jnp.einsum("bcin,bcih,bchnp->bcihp", Cr_b, in_decay, prev_states)
+
+    y = (y_diag.astype(f32) + y_off).reshape(bt, s, h, p)
+    y = y + D.astype(f32)[None, None, :, None] * x.astype(f32)
+    if return_state:
+        return y, final
+    return y

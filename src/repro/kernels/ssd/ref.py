@@ -1,0 +1,34 @@
+"""Naive O(S^2) oracle for the Mamba-2 SSD (state-space dual) operator.
+
+The "attention form" of SSD [arXiv:2405.21060]: with per-step decay
+``a_t = exp(dt_t * A_h)`` the output is
+
+    y_i = sum_{j<=i} (C_i . B_j) * prod_{k=j+1..i} a_k * dt_j * x_j + D_h x_i
+
+Used as the correctness oracle for the chunked implementation in ops.py.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ssd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+        C: jnp.ndarray, D: jnp.ndarray) -> jnp.ndarray:
+    """x: (Bt, S, H, P); dt: (Bt, S, H) (post-softplus, > 0); A: (H,) (< 0);
+    B, C: (Bt, S, N); D: (H,).  Returns (Bt, S, H, P)."""
+    x = x.astype(jnp.float32)
+    dt = dt.astype(jnp.float32)
+    la = dt * A.astype(jnp.float32)[None, None, :]          # log a_t  (Bt,S,H)
+    cum = jnp.cumsum(la, axis=1)                            # (Bt,S,H)
+    # L[b,h,i,j] = exp(cum_i - cum_j) for j <= i else 0
+    Lm = cum[:, :, None, :] - cum[:, None, :, :]            # (Bt,S,S,H) i,j
+    s = x.shape[1]
+    mask = (jnp.arange(s)[:, None] >= jnp.arange(s)[None, :])[None, :, :, None]
+    Lm = jnp.where(mask, jnp.exp(Lm), 0.0)
+    cb = jnp.einsum("bin,bjn->bij", C.astype(jnp.float32),
+                    B.astype(jnp.float32))                   # (Bt,S,S)
+    w = cb[:, :, :, None] * Lm * dt[:, None, :, :]           # (Bt,S,S,H)
+    y = jnp.einsum("bijh,bjhp->bihp", w, x)
+    y = y + D.astype(jnp.float32)[None, None, :, None] * x
+    return y

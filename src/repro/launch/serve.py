@@ -1,0 +1,55 @@
+"""Serving launcher: batched generation against any assigned arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
+        --batch 4 --prompt-len 32 --new-tokens 32
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.arch_names())
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    params = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+    eng = Engine(params, cfg,
+                 ServeConfig(max_len=args.prompt_len + args.new_tokens,
+                             temperature=args.temperature))
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab,
+                           (args.batch, args.prompt_len)).astype(np.int32)
+    extra = None
+    if cfg.family == "enc_dec":
+        extra = {"enc_embeds": rng.standard_normal(
+            (args.batch, cfg.enc_len, cfg.d_model)).astype(np.float32)}
+    elif cfg.input_mode == "embeddings":
+        # VLM: prompt is precomputed patch+text embeddings (frontend stub)
+        extra = {"embeds": rng.standard_normal(
+            (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32)}
+    out = eng.generate(prompts, args.new_tokens, extra_inputs=extra)
+    print(f"[serve] generated {out.shape} tokens; "
+          f"prefill {eng.stats['prefill_s']:.2f}s, "
+          f"decode {eng.stats['decode_s']:.2f}s "
+          f"({eng.stats['tokens_out'] / max(eng.stats['decode_s'], 1e-9):.1f} tok/s)")
+    print(out[:, :12])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,213 @@
+"""Jittable production steps (train / prefill / serve) + ShapeDtypeStruct
+input specs for every (arch x shape) dry-run cell.
+
+``train_step`` does loss + grad (with optional microbatch accumulation) +
+AdamW; ``prefill_step`` runs the prompt and materializes decode caches;
+``serve_step`` decodes one token against the caches.  All are pure functions
+of (params, state, batch) suitable for ``jax.jit`` with explicit shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.dist import partition
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+# ================================================================ train step
+def train_step(params, opt_state, batch, *, cfg: ModelConfig,
+               opt_cfg: adamw.OptConfig, num_microbatches: int = 1):
+    """One optimizer step.  ``batch`` leading dim is the global batch;
+    with ``num_microbatches > 1`` gradients are accumulated over microbatch
+    slices under lax.scan (bounds activation memory)."""
+
+    def loss(p, b):
+        return M.loss_fn(p, b, cfg)
+
+    if num_microbatches <= 1:
+        (_, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, batch)
+    else:
+        def micro(b):
+            return jax.tree.map(
+                lambda x: x.reshape((num_microbatches,
+                                     x.shape[0] // num_microbatches) + x.shape[1:]),
+                b)
+
+        mb = micro(batch)
+
+        def body(carry, b):
+            acc, macc = carry
+            (_, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, b)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc, grads)
+            macc = jax.tree.map(lambda a, m: a + m, macc, metrics)
+            return (acc, macc), None
+
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, metrics), _ = jax.lax.scan(
+            body, (zero, _zero_metrics()), mb)
+        grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+        metrics = jax.tree.map(lambda m: m / num_microbatches, metrics)
+
+    new_params, new_opt, opt_metrics = adamw.adamw_update(
+        grads, opt_state, params, opt_cfg)
+    metrics = {**metrics, **opt_metrics}
+    return new_params, new_opt, metrics
+
+
+def _zero_metrics():
+    return {"loss": jnp.float32(0), "aux/load_balance": jnp.float32(0),
+            "aux/router_z": jnp.float32(0)}
+
+
+# ============================================================== serve steps
+def prefill_step(params, batch, *, cfg: ModelConfig, max_len: int):
+    return M.prefill(params, batch, cfg, max_len=max_len)
+
+
+def serve_step(params, caches, tokens, *, cfg: ModelConfig):
+    return M.decode_step(params, caches, tokens, cfg)
+
+
+# ======================================================== shape-only builders
+def batch_sds(cfg: ModelConfig, shape: ShapeSpec, *, with_labels: bool = True):
+    """ShapeDtypeStructs for a train/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out: dict[str, Any] = {}
+    if cfg.family == "enc_dec":
+        out["enc_embeds"] = jax.ShapeDtypeStruct((b, cfg.enc_len, cfg.d_model), dt)
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    elif cfg.input_mode == "embeddings":
+        out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def cache_sds(cfg: ModelConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs for decode caches — mirrors M.prefill's output
+    structure exactly (asserted by tests/test_steps.py)."""
+    dt = jnp.dtype(cfg.dtype)
+    kvl = M._kv_cache_len(cfg, max_len)
+
+    def kv(layers, length):
+        return {
+            "k": jax.ShapeDtypeStruct((layers, batch, length, cfg.n_kv_heads,
+                                       cfg.hd), dt),
+            "v": jax.ShapeDtypeStruct((layers, batch, length, cfg.n_kv_heads,
+                                       cfg.hd), dt),
+            "len": jax.ShapeDtypeStruct((layers,), jnp.int32),
+        }
+
+    def ssm_states(lead):
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "conv": jax.ShapeDtypeStruct(lead + (batch, cfg.conv_width - 1,
+                                                 conv_ch), dt),
+            "ssd": jax.ShapeDtypeStruct(lead + (batch, cfg.ssm_heads,
+                                                cfg.ssm_state,
+                                                cfg.ssm_headdim), jnp.float32),
+        }
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        return kv(cfg.n_layers, kvl)
+    if cfg.family == "ssm":
+        return ssm_states((cfg.n_layers,))
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid_group
+        trailing = cfg.n_layers % cfg.hybrid_group
+        out = {"mamba": ssm_states((n_groups, cfg.hybrid_group)),
+               "attn": kv(n_groups, kvl)}
+        if trailing:
+            out["trailing"] = ssm_states((trailing,))
+        return out
+    if cfg.family == "enc_dec":
+        cross = (jax.ShapeDtypeStruct((cfg.dec_layers, batch, cfg.enc_len,
+                                       cfg.n_kv_heads, cfg.hd), dt),) * 2
+        return {"self": kv(cfg.dec_layers, kvl), "cross": cross}
+    raise ValueError(cfg.family)
+
+
+def decode_tokens_sds(batch: int):
+    return jax.ShapeDtypeStruct((batch,), jnp.int32)
+
+
+# ------------------------------------------------------------- shardings
+BATCH_AXES = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
+              "embeds": ("batch", "seq", None),
+              "enc_embeds": ("batch", "seq", None)}
+
+
+def batch_shardings(batch_tree, mesh):
+    return jax.tree.map_with_path(
+        lambda path, sds: partition.named_sharding(
+            BATCH_AXES[path[0].key], mesh, shape=sds.shape),
+        batch_tree)
+
+
+def cache_axes(cfg: ModelConfig):
+    """Logical axes for each cache leaf (same tree structure as cache_sds)."""
+    kv = {"k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+          "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+          "len": ("layers",)}
+    ssm = {"conv": (None, "batch", None, "conv_ch"),
+           "ssd": (None, "batch", "ssm_heads", "ssm_state", None)}
+    ssm_g = {"conv": (None, None, "batch", None, "conv_ch"),
+             "ssd": (None, None, "batch", "ssm_heads", "ssm_state", None)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        return kv
+    if cfg.family == "ssm":
+        return ssm
+    if cfg.family == "hybrid":
+        out = {"mamba": ssm_g, "attn": kv}
+        if cfg.n_layers % cfg.hybrid_group:
+            out["trailing"] = ssm
+        return out
+    if cfg.family == "enc_dec":
+        x = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        return {"self": kv, "cross": (x, x)}
+    raise ValueError(cfg.family)
+
+
+def cache_shardings(cfg: ModelConfig, mesh, batch: int, max_len: int):
+    axes = cache_axes(cfg)
+    sds = cache_sds(cfg, batch, max_len)
+    return partition.tree_shardings(axes, mesh, sds_tree=sds)
+
+
+def param_shardings(param_tree_with_axes, mesh):
+    """Param (axes) tree -> NamedSharding tree."""
+    axes = nn.axes_of(param_tree_with_axes)
+    return partition.tree_shardings(axes, mesh,
+                                    sds_tree=nn.unwrap(param_tree_with_axes))
+
+
+def opt_shardings(pshard, mesh):
+    return {"mu": pshard, "nu": pshard,
+            "step": partition.named_sharding((), mesh)}
+
+
+# ------------------------------------------------------------ microbatching
+def pick_microbatches(cfg: ModelConfig, shape: ShapeSpec, mesh) -> int:
+    """Default microbatch count: keep per-device live tokens bounded."""
+    data_ways = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            data_ways *= mesh.shape[ax]
+    per_dev_tokens = shape.global_batch * shape.seq_len / max(data_ways, 1)
+    target = 64 * 1024                      # tokens per device per microbatch
+    n = max(1, int(per_dev_tokens // target))
+    while shape.global_batch % n:
+        n -= 1
+    return n

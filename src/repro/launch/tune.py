@@ -1,0 +1,87 @@
+"""Offline SIP search driver (paper §4.1's deployment workflow).
+
+Tunes every registered kernel for a set of deployment shapes and persists
+the best test-passing schedules to a cache file that training/serving then
+load with zero runtime overhead:
+
+    PYTHONPATH=src python -m repro.launch.tune --cache /tmp/sip_cache.json \
+        --rounds 2 --kernel gemm --kernel attention
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import ScheduleCache
+from repro.core.jit import TuneConfig
+
+
+def tune_gemm(cache, cfg: TuneConfig, rng):
+    from repro.kernels.gemm_fused import ops
+    kern = ops.make(cache=cache)
+    for m, n, k in ((64, 64, 128), (128, 128, 256)):
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        kern.tune([x, w], cfg, verbose=True)
+
+
+def tune_attention(cache, cfg: TuneConfig, rng):
+    from repro.kernels.flash_attention import ops
+    kern = ops.make(causal=True, cache=cache)
+    for b, hq, hkv, s, d in ((1, 4, 2, 128, 32),):
+        q = rng.standard_normal((b, hq, s, d)).astype(np.float32)
+        k = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
+        v = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
+        kern.tune([q, k, v], cfg, verbose=True)
+
+
+def tune_rmsnorm(cache, cfg: TuneConfig, rng):
+    from repro.kernels.rmsnorm import ops
+    kern = ops.make(cache=cache)
+    x = rng.standard_normal((64, 128)).astype(np.float32)
+    g = rng.standard_normal((128,)).astype(np.float32)
+    kern.tune([x, g], cfg, verbose=True)
+
+
+def tune_ssd(cache, cfg: TuneConfig, rng):
+    from repro.kernels.ssd import pallas_ops
+    kern = pallas_ops.make(cache=cache)
+    g, q, h, p, n = 4, 16, 4, 8, 16
+    xb = rng.standard_normal((g, q, h, p)).astype(np.float32)
+    la = -np.abs(rng.standard_normal((g, q, h))).astype(np.float32) * 0.1
+    B = rng.standard_normal((g, q, n)).astype(np.float32) * 0.3
+    C = rng.standard_normal((g, q, n)).astype(np.float32) * 0.3
+    kern.tune([xb, la, B, C], cfg, verbose=True)
+
+
+KERNELS = {"gemm": tune_gemm, "attention": tune_attention,
+           "rmsnorm": tune_rmsnorm, "ssd": tune_ssd}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache", default="/tmp/sip_cache.json")
+    ap.add_argument("--kernel", action="append", default=[],
+                    choices=list(KERNELS))
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--cooling", type=float, default=1.05)
+    ap.add_argument("--final-samples", type=int, default=64)
+    ap.add_argument("--guided", action="store_true",
+                    help="use the beyond-paper guided mutation policy")
+    args = ap.parse_args()
+
+    cache = ScheduleCache(args.cache)
+    cfg = TuneConfig(rounds=args.rounds, cooling=args.cooling,
+                     final_samples=args.final_samples,
+                     step_samples=1)
+    rng = np.random.default_rng(0)
+    for name in (args.kernel or list(KERNELS)):
+        print(f"[tune] {name}")
+        KERNELS[name](cache, cfg, rng)
+    print(f"[tune] schedules persisted to {args.cache}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Dense MLP variants: SwiGLU / GeGLU / GELU."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.partition import shard
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+
+
+def init_mlp(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_down": nn.param(ks[2], (f, d), ("mlp", "embed"), scale=f ** -0.5)}
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        p["w_gate"] = nn.param(ks[0], (d, f), ("embed", "mlp"), scale=d ** -0.5)
+        p["w_up"] = nn.param(ks[1], (d, f), ("embed", "mlp"), scale=d ** -0.5)
+    elif cfg.mlp_type == "gelu":
+        p["w_up"] = nn.param(ks[1], (d, f), ("embed", "mlp"), scale=d ** -0.5)
+    else:
+        raise ValueError(cfg.mlp_type)
+    return p
+
+
+def mlp(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    dt = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(x @ p["w_gate"].astype(dt)) * (x @ p["w_up"].astype(dt))
+    else:
+        h = jax.nn.gelu(x @ p["w_up"].astype(dt), approximate=True)
+    h = shard(h, "batch", "seq", "mlp")
+    return h @ p["w_down"].astype(dt)

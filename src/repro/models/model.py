@@ -1,0 +1,401 @@
+"""Top-level models: decoder LMs (dense/MoE/VLM), Mamba-2, Zamba-2 hybrid,
+and the encoder-decoder (audio) — with train, prefill and decode entry points.
+
+Layer stacks run under ``jax.lax.scan`` over stacked per-layer params with
+optional remat — O(1) HLO size in depth (what makes the 80-compile dry-run
+feasible) and the production-standard choice at 1000+-node scale.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.partition import shard
+from repro.models import attention as attn_mod
+from repro.models import blocks
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+
+Params = Any
+
+
+# ===================================================================== init
+def init_lm(key, cfg: ModelConfig) -> Params:
+    cfg.validate()
+    ks = jax.random.split(key, 10)
+    d = cfg.d_model
+    p: dict[str, Any] = {}
+    if cfg.family != "enc_dec":
+        p["embed"] = nn.param(ks[0], (cfg.vocab, d), ("vocab", "embed"),
+                              scale=1.0)
+        p["ln_f"] = nn.rmsnorm_init(ks[1], d)
+        p["lm_head"] = nn.param(ks[2], (d, cfg.vocab), ("embed", "vocab"),
+                                scale=d ** -0.5)
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["blocks"] = nn.stack_layers(
+            lambda k: blocks.init_decoder_block(k, cfg), ks[3], cfg.n_layers)
+    elif cfg.family == "ssm":
+        p["blocks"] = nn.stack_layers(
+            lambda k: blocks.init_mamba_block(k, cfg), ks[3], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.hybrid_group
+        trailing = cfg.n_layers % cfg.hybrid_group
+        p["groups"] = nn.stack_layers(
+            lambda k: blocks.init_hybrid_group(k, cfg), ks[3], n_groups)
+        p["shared_attn"] = blocks.init_decoder_block(ks[4], cfg)
+        if trailing:
+            p["trailing"] = nn.stack_layers(
+                lambda k: blocks.init_mamba_block(k, cfg), ks[5], trailing)
+    elif cfg.family == "enc_dec":
+        p["enc_blocks"] = nn.stack_layers(
+            lambda k: blocks.init_decoder_block(k, cfg), ks[3], cfg.enc_layers)
+        p["enc_ln"] = nn.rmsnorm_init(ks[4], d)
+        p["dec_embed"] = nn.param(ks[5], (cfg.vocab, d), ("vocab", "embed"),
+                                  scale=1.0)
+        p["dec_blocks"] = nn.stack_layers(
+            lambda k: blocks.init_decoder_block(k, cfg, cross=True), ks[6],
+            cfg.dec_layers)
+        p["dec_ln"] = nn.rmsnorm_init(ks[7], d)
+        p["lm_head"] = nn.param(ks[8], (d, cfg.vocab), ("embed", "vocab"),
+                                scale=d ** -0.5)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.param_dtype != "float32":
+        pd = jnp.dtype(cfg.param_dtype)
+        p = jax.tree.map(
+            lambda prm: nn.Param(prm.value.astype(pd), prm.axes)
+            if jnp.issubdtype(prm.value.dtype, jnp.floating) else prm,
+            p, is_leaf=nn.is_param)
+    return p
+
+
+def init_lm_shapes(key, cfg: ModelConfig):
+    """Shape-only init (no allocation) — dry-run entry point."""
+    return jax.eval_shape(functools.partial(init_lm, cfg=cfg), key)
+
+
+# =============================================================== scan utils
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        # save matmul outputs, recompute the cheap elementwise ops only —
+        # trades activation memory for a large cut in recompute FLOPs/bytes
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _scan(fn, carry, xs, cfg: ModelConfig):
+    if cfg.scan_layers:
+        return jax.lax.scan(_maybe_remat(fn, cfg), carry, xs)
+    f = _maybe_remat(fn, cfg)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = f(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    stacked = (jax.tree.map(lambda *a: jnp.stack(a), *ys)
+               if ys and ys[0] is not None else None)
+    return carry, stacked
+
+
+def _sum_aux(aux):
+    return {k: jnp.sum(v) for k, v in aux.items()} if aux else {}
+
+
+# ============================================================== forward (train)
+def embed_inputs(p, inputs: dict[str, jnp.ndarray], cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.input_mode == "embeddings" and "embeds" in inputs:
+        x = inputs["embeds"].astype(dt)
+    else:
+        x = p["embed"].astype(dt)[inputs["tokens"]]
+    return shard(x, "batch", "act_seq" if cfg.seq_shard else "seq", None)
+
+
+def forward(p: Params, inputs: dict[str, jnp.ndarray], cfg: ModelConfig):
+    """Training/eval forward -> (logits, aux).  Decoder families."""
+    if cfg.family == "enc_dec":
+        return _forward_enc_dec(p, inputs, cfg)
+    x = embed_inputs(p, inputs, cfg)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, lp):
+            h, aux, _ = blocks.decoder_block(lp, h, cfg, causal=True)
+            return h, aux
+        x, aux = _scan(body, x, p["blocks"], cfg)
+        aux = _sum_aux(aux)
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            h, _ = blocks.mamba_block(lp, h, cfg)
+            return h, blocks.ZERO_AUX()
+        x, aux = _scan(body, x, p["blocks"], cfg)
+        aux = _sum_aux(aux)
+    elif cfg.family == "hybrid":
+        x, aux = _hybrid_forward(p, x, cfg)
+    else:
+        raise ValueError(cfg.family)
+
+    x = nn.rmsnorm_apply(p["ln_f"], x)
+    logits = x @ p["lm_head"].astype(x.dtype)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def _hybrid_forward(p, x, cfg: ModelConfig):
+    n_groups = cfg.n_layers // cfg.hybrid_group
+    flags = _hybrid_flags(cfg, n_groups)
+
+    def body(h, xs):
+        gp, flag = xs
+        h, _, _ = blocks.hybrid_group(gp, p["shared_attn"], h, cfg, flag)
+        return h, blocks.ZERO_AUX()
+
+    x, aux = _scan(body, x, (p["groups"], flags), cfg)
+    if "trailing" in p:
+        def tbody(h, lp):
+            h, _ = blocks.mamba_block(lp, h, cfg)
+            return h, None
+        x, _ = _scan(tbody, x, p["trailing"], cfg)
+    return x, _sum_aux(aux)
+
+
+def _hybrid_flags(cfg: ModelConfig, n_groups: int):
+    every = cfg.hybrid_attn_every
+    return (jnp.arange(n_groups) % every) == (every - 1)
+
+
+def _forward_enc_dec(p, inputs, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    enc = shard(inputs["enc_embeds"].astype(dt), "batch", "seq", None)
+
+    def enc_body(h, lp):
+        h, aux, _ = blocks.decoder_block(lp, h, cfg, causal=False)
+        return h, aux
+    enc, enc_aux = _scan(enc_body, enc, p["enc_blocks"], cfg)
+    enc = nn.rmsnorm_apply(p["enc_ln"], enc)
+
+    x = p["dec_embed"].astype(dt)[inputs["tokens"]]
+    x = shard(x, "batch", "seq", None)
+
+    def dec_body(h, lp):
+        kv = attn_mod.encode_kv(lp["xattn"], enc, cfg)
+        h, aux, _ = blocks.decoder_block(lp, h, cfg, causal=True, cross_kv=kv)
+        return h, aux
+    x, dec_aux = _scan(dec_body, x, p["dec_blocks"], cfg)
+    x = nn.rmsnorm_apply(p["dec_ln"], x)
+    logits = x @ p["lm_head"].astype(x.dtype)
+    logits = shard(logits, "batch", "seq", "vocab")
+    aux = {k: _sum_aux(enc_aux).get(k, 0.0) + _sum_aux(dec_aux).get(k, 0.0)
+           for k in ("load_balance", "router_z")}
+    return logits, aux
+
+
+# ===================================================================== loss
+def loss_fn(p: Params, batch: dict[str, jnp.ndarray], cfg: ModelConfig):
+    logits, aux = forward(p, batch, cfg)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    lf = logits.astype(jnp.float32)
+    if cfg.logits_microbatch > 1:
+        # chunk the softmax over the sequence dim to bound live logits memory
+        nchunks = cfg.logits_microbatch
+        s = labels.shape[1]
+        assert s % nchunks == 0
+        cs = s // nchunks
+        def chunk_loss(i):
+            sl = jax.lax.dynamic_slice_in_dim(lf, i * cs, cs, axis=1)
+            ll = jax.lax.dynamic_slice_in_dim(labels, i * cs, cs, axis=1)
+            return _xent(sl, ll)
+        per = jax.lax.map(chunk_loss, jnp.arange(nchunks))
+        token_loss = jnp.moveaxis(per, 0, 1).reshape(labels.shape)
+    else:
+        token_loss = _xent(lf, labels)
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        loss = jnp.sum(token_loss * mask) / denom
+    else:
+        loss = jnp.mean(token_loss)
+    total = loss + sum(aux.values()) if aux else loss
+    metrics = {"loss": loss, **{f"aux/{k}": v for k, v in aux.items()}}
+    return total, metrics
+
+
+def _xent(logits_f32, labels):
+    lse = jax.nn.logsumexp(logits_f32, axis=-1)
+    gold = jnp.take_along_axis(logits_f32, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+# ============================================================ prefill / decode
+def prefill(p: Params, inputs: dict[str, jnp.ndarray], cfg: ModelConfig,
+            max_len: int):
+    """Forward over the prompt, building decode caches sized ``max_len``.
+    Returns (last_token_logits, caches)."""
+    if cfg.family == "enc_dec":
+        return _prefill_enc_dec(p, inputs, cfg, max_len)
+    x = embed_inputs(p, inputs, cfg)
+    s = x.shape[1]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, lp):
+            h, _, cache = blocks.decoder_block(lp, h, cfg, causal=True,
+                                               return_cache=True)
+            return h, cache
+        x, caches = _scan(body, x, p["blocks"], cfg)
+        caches = _pad_kv_caches(caches, cfg, max_len)
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            h, st = blocks.mamba_block(lp, h, cfg, return_state=True)
+            return h, st
+        x, caches = _scan(body, x, p["blocks"], cfg)
+    elif cfg.family == "hybrid":
+        x, caches = _hybrid_prefill(p, x, cfg, max_len)
+    else:
+        raise ValueError(cfg.family)
+
+    x = nn.rmsnorm_apply(p["ln_f"], x[:, -1:])
+    logits = (x @ p["lm_head"].astype(x.dtype))[:, 0]
+    return logits, caches
+
+
+def _kv_cache_len(cfg: ModelConfig, max_len: int) -> int:
+    """Rolling window cache for SWA models (production ring buffer)."""
+    return min(max_len, cfg.window) if cfg.window else max_len
+
+
+def _pad_kv_caches(caches, cfg: ModelConfig, max_len: int):
+    m = _kv_cache_len(cfg, max_len)
+
+    def pad(kv):   # (L, B, S, H, D) -> (L, B, m, H, D)
+        l, b, s, h, hd = kv.shape
+        if s == m:
+            return jnp.roll(kv, s % m, axis=2) if s % m else kv
+        if s > m:   # keep the last window, rolled so slot(p) = p % m
+            return jnp.roll(kv[:, :, s - m:], s % m, axis=2)
+        buf = jnp.zeros((l, b, m, h, hd), kv.dtype)
+        return jax.lax.dynamic_update_slice(buf, kv, (0, 0, 0, 0, 0))
+
+    return {"k": pad(caches["k"]), "v": pad(caches["v"]),
+            "len": caches["len"]}
+
+
+def _hybrid_prefill(p, x, cfg: ModelConfig, max_len: int):
+    n_groups = cfg.n_layers // cfg.hybrid_group
+    flags = _hybrid_flags(cfg, n_groups)
+
+    def body(h, xs):
+        gp, flag = xs
+        h, states, cache = blocks.hybrid_group(gp, p["shared_attn"], h, cfg,
+                                               flag, return_state=True)
+        return h, (states, cache)
+    x, (states, attn_caches) = _scan(body, x, (p["groups"], flags), cfg)
+    attn_caches = _pad_kv_caches(attn_caches, cfg, max_len)
+    caches = {"mamba": states, "attn": attn_caches}
+    if "trailing" in p:
+        def tbody(h, lp):
+            h, st = blocks.mamba_block(lp, h, cfg, return_state=True)
+            return h, st
+        x, tstates = _scan(tbody, x, p["trailing"], cfg)
+        caches["trailing"] = tstates
+    return x, caches
+
+
+def _prefill_enc_dec(p, inputs, cfg: ModelConfig, max_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    enc = inputs["enc_embeds"].astype(dt)
+
+    def enc_body(h, lp):
+        h, _, _ = blocks.decoder_block(lp, h, cfg, causal=False)
+        return h, None
+    enc, _ = _scan(enc_body, enc, p["enc_blocks"], cfg)
+    enc = nn.rmsnorm_apply(p["enc_ln"], enc)
+
+    x = p["dec_embed"].astype(dt)[inputs["tokens"]]
+
+    def dec_body(h, lp):
+        kv = attn_mod.encode_kv(lp["xattn"], enc, cfg)
+        h, _, cache = blocks.decoder_block(lp, h, cfg, causal=True,
+                                           return_cache=True, cross_kv=kv)
+        return h, (cache, kv)
+    x, (self_caches, cross_kvs) = _scan(dec_body, x, p["dec_blocks"], cfg)
+    x = nn.rmsnorm_apply(p["dec_ln"], x[:, -1:])
+    logits = (x @ p["lm_head"].astype(x.dtype))[:, 0]
+    return logits, {"self": _pad_kv_caches(self_caches, cfg, max_len),
+                    "cross": cross_kvs}
+
+
+def decode_step(p: Params, caches, tokens: jnp.ndarray, cfg: ModelConfig):
+    """One decode step.  tokens: (B,) int32 -> (logits (B, vocab), caches)."""
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "enc_dec":
+        return _decode_enc_dec(p, caches, tokens, cfg)
+    x = p["embed"].astype(dt)[tokens][:, None, :]       # (B, 1, d)
+    x = shard(x, "batch", "seq", None)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            lp, cache = xs
+            h, _, cache = blocks.decoder_block(
+                lp, h, cfg, causal=True, pos_offset=cache["len"], cache=cache)
+            return h, cache
+        x, caches = _scan(body, x, (p["blocks"], caches), cfg)
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            h, st = blocks.mamba_block(lp, h, cfg, state=st)
+            return h, st
+        x, caches = _scan(body, x, (p["blocks"], caches), cfg)
+    elif cfg.family == "hybrid":
+        x, caches = _hybrid_decode(p, x, caches, cfg)
+    else:
+        raise ValueError(cfg.family)
+
+    x = nn.rmsnorm_apply(p["ln_f"], x)
+    logits = (x @ p["lm_head"].astype(x.dtype))[:, 0]
+    return logits, caches
+
+
+def _hybrid_decode(p, x, caches, cfg: ModelConfig):
+    n_groups = cfg.n_layers // cfg.hybrid_group
+    flags = _hybrid_flags(cfg, n_groups)
+
+    def body(h, xs):
+        (gp, flag), (states, cache) = xs
+        h, states, cache = blocks.hybrid_group(
+            gp, p["shared_attn"], h, cfg, flag, states=states,
+            attn_cache=cache, pos_offset=cache["len"])
+        return h, (states, cache)
+    x, (mstates, acaches) = _scan(
+        body, x, ((p["groups"], flags), (caches["mamba"], caches["attn"])), cfg)
+    new = {"mamba": mstates, "attn": acaches}
+    if "trailing" in p:
+        def tbody(h, xs):
+            lp, st = xs
+            h, st = blocks.mamba_block(lp, h, cfg, state=st)
+            return h, st
+        x, tstates = _scan(tbody, x, (p["trailing"], caches["trailing"]), cfg)
+        new["trailing"] = tstates
+    return x, new
+
+
+def _decode_enc_dec(p, caches, tokens, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    x = p["dec_embed"].astype(dt)[tokens][:, None, :]
+
+    def body(h, xs):
+        lp, cache, kv = xs
+        h, _, cache = blocks.decoder_block(
+            lp, h, cfg, causal=True, pos_offset=cache["len"], cache=cache,
+            cross_kv=kv)
+        return h, cache
+    x, self_caches = _scan(
+        body, x, (p["dec_blocks"], caches["self"], caches["cross"]), cfg)
+    x = nn.rmsnorm_apply(p["dec_ln"], x)
+    logits = (x @ p["lm_head"].astype(x.dtype))[:, 0]
+    return logits, {"self": self_caches, "cross": caches["cross"]}

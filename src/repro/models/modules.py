@@ -1,0 +1,94 @@
+"""Minimal functional module system with logical-axis sharding metadata.
+
+Parameters are nested dicts of :class:`Param` leaves; each Param carries the
+*logical* axis names of its dimensions (MaxText-style).  Logical names are
+resolved to mesh axes by the rules in :mod:`repro.dist.partition`, so the
+same model code runs unsharded on one CPU device and fully sharded on the
+(pod, data, model) production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    value: Any
+    axes: tuple[str | None, ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def param(key, shape, axes, *, scale: float | None = None,
+          init: str = "normal", dtype=jnp.float32) -> Param:
+    assert len(axes) == len(shape), (axes, shape)
+    if init == "normal":
+        s = scale if scale is not None else (shape[0] ** -0.5 if shape else 1.0)
+        v = jax.random.normal(key, shape, dtype) * jnp.asarray(s, dtype)
+    elif init == "ones":
+        v = jnp.ones(shape, dtype)
+    elif init == "zeros":
+        v = jnp.zeros(shape, dtype)
+    else:
+        raise ValueError(init)
+    return Param(v, tuple(axes))
+
+
+def unwrap(tree) -> Any:
+    """Param tree -> raw value tree (what train/serve code consumes)."""
+    return jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def axes_of(tree) -> Any:
+    """Param tree -> logical-axes tree (same structure, tuples at leaves)."""
+    return jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def stack_layers(init_fn: Callable[[jax.Array], Any], key: jax.Array,
+                 n_layers: int) -> Any:
+    """vmap ``init_fn`` over per-layer keys and prepend the 'layers' logical
+    axis to every Param (the lax.scan stacking dimension)."""
+    keys = jax.random.split(key, n_layers)
+    stacked = jax.vmap(init_fn)(keys)
+    return jax.tree.map(lambda p: Param(p.value, ("layers",) + p.axes),
+                        stacked, is_leaf=is_param)
+
+
+# ---------------------------------------------------------------- primitives
+def dense_init(key, in_dim: int, out_dim: int, *, in_axis: str | None,
+               out_axis: str | None, scale: float | None = None) -> Param:
+    return param(key, (in_dim, out_dim), (in_axis, out_axis),
+                 scale=scale if scale is not None else in_dim ** -0.5)
+
+
+def dense(p: jnp.ndarray, x: jnp.ndarray, dtype=None) -> jnp.ndarray:
+    w = p.astype(dtype) if dtype is not None else p
+    return x @ w
+
+
+def rmsnorm_init(key, dim: int, axis: str | None = "embed") -> Param:
+    del key
+    return param(jax.random.PRNGKey(0), (dim,), (axis,), init="ones")
+
+
+def rmsnorm_apply(gamma: jnp.ndarray, x: jnp.ndarray,
+                  eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * gamma.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,137 @@
+"""Top-k MoE with sort-based capacity dispatch (expert-parallel over 'model').
+
+Dispatch is the production-standard permute/bucket scheme (MaxText/MegaBlocks
+lineage, without a custom grouped-GEMM kernel):
+
+  1. router logits -> top-k experts per token (softmax-renormalized gates);
+  2. token copies sorted by expert id; position-within-expert computed from
+     the sorted segment starts; copies beyond expert capacity are dropped;
+  3. scatter into a dense (E, C, d) buffer; per-expert FFN as one batched
+     einsum with experts sharded over the 'model' axis (EP);
+  4. gather back, unsort, gate-weight, sum the k copies.
+
+Two dispatch scopes:
+
+  * global (``cfg.moe_groups == 0``): one argsort/scatter over all tokens.
+    Simple, but under GSPMD the scatter into the expert buffer partial-sums
+    across data shards — it all-reduces the whole (E, C, d) buffer every
+    layer (measured in EXPERIMENTS.md §Perf: the dominant collective for
+    dbrx/llama4).
+  * group-local (``cfg.moe_groups = G``): tokens are grouped along the batch
+    dim (groups sharded over pod x data) and routed within their group, so
+    sort/scatter are shard-local and the expert einsum
+    ``gecd,edf->gecf`` is already aligned on (G->data, E->model) — no
+    dispatch collective at all.  This is the EP-friendly layout GShard-style
+    systems use.
+
+Aux losses: switch-style load balancing + router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.partition import shard
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": nn.param(ks[0], (d, e), ("embed", "experts"), scale=d ** -0.5),
+        "w_gate": nn.param(ks[1], (e, d, f), ("experts", "embed", "mlp"),
+                           scale=d ** -0.5),
+        "w_up": nn.param(ks[2], (e, d, f), ("experts", "embed", "mlp"),
+                         scale=d ** -0.5),
+        "w_down": nn.param(ks[3], (e, f, d), ("experts", "mlp", "embed"),
+                           scale=f ** -0.5),
+    }
+
+
+def _route(p, xt: jnp.ndarray, cfg: ModelConfig):
+    """xt: (T, d) -> (gates (T,k), expert_idx (T,k), aux)."""
+    e, k = cfg.n_experts, cfg.top_k
+    logits = (xt @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], e), axis=0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = {
+        "load_balance": cfg.router_aux_weight * e * jnp.sum(density * mean_probs),
+        "router_z": cfg.router_z_weight *
+                    jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    return gate_vals, expert_idx, aux
+
+
+def _dispatch_ffn(p, xt: jnp.ndarray, gate_vals, expert_idx,
+                  cfg: ModelConfig, cap: int) -> jnp.ndarray:
+    """Sort-based capacity dispatch + per-expert FFN over (T, d) tokens."""
+    t, d = xt.shape
+    e, k = cfg.n_experts, cfg.top_k
+    flat_expert = expert_idx.reshape(-1)                        # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(t), k)
+
+    sort_idx = jnp.argsort(flat_expert, stable=True)
+    sorted_expert = flat_expert[sort_idx]
+    sorted_token = flat_token[sort_idx]
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(e))
+    pos_in_exp = jnp.arange(t * k) - seg_start[sorted_expert]
+    keep = pos_in_exp < cap
+    dest = jnp.where(keep, sorted_expert * cap + pos_in_exp, e * cap)
+
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[dest].set(xt[sorted_token])
+    buf = buf[:-1].reshape(e, cap, d)
+
+    dt = xt.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else \
+            (lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))) * \
+            jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt)),
+                        approximate=True)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+
+    gathered = out_buf.reshape(e * cap, d)[jnp.minimum(dest, e * cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    contrib = gathered * flat_gate[sort_idx][:, None].astype(dt)
+    return jnp.zeros((t, d), dt).at[sorted_token].add(contrib)
+
+
+def moe(p, x: jnp.ndarray, cfg: ModelConfig, *, dropless: bool = False):
+    """x: (B, S, d) -> (y, aux_losses dict).
+
+    ``dropless=True`` (decode path) sizes every expert for the worst case
+    (capacity = n_tokens per dispatch scope) so no token is ever dropped."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    t = b * s
+    g = cfg.moe_groups
+    if g and t % g == 0 and t // g >= 1 and not dropless:
+        tg = t // g
+        xg = x.reshape(g, tg, d)
+        xg = shard(xg, "batch", None, None)       # groups over pod x data
+        gate_vals, expert_idx, aux = jax.vmap(
+            lambda xt: _route(p, xt, cfg))(xg)
+        aux = {kk: jnp.mean(v) for kk, v in aux.items()}
+        cap = min(max(int(tg * k / e * cfg.capacity_factor), 1), tg)
+        y = jax.vmap(lambda xt, gv, ei:
+                     _dispatch_ffn(p, xt, gv, ei, cfg, cap))(
+            xg, gate_vals, expert_idx)
+        y = shard(y, "batch", None, None)
+        return y.reshape(b, s, d), aux
+
+    xt = x.reshape(t, d)
+    gate_vals, expert_idx, aux = _route(p, xt, cfg)
+    # top-k experts are distinct, so capacity t is always dropless
+    cap = t if dropless else min(max(int(t * k / e * cfg.capacity_factor), 1), t)
+    y = _dispatch_ffn(p, xt, gate_vals, expert_idx, cfg, cap)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,125 @@
+"""Mamba-2 mixer block (SSD core), with O(1)-state decode.
+
+Follows the Mamba-2 reference structure: a fused input projection producing
+(z, x, B, C, dt), a short causal depthwise conv over (x, B, C), the chunked
+SSD scan (kernels/ssd), a gated RMSNorm, and the output projection.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.partition import shard
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    proj_out = 2 * di + 2 * n + h          # z, x, B, C, dt
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": nn.param(ks[0], (d, proj_out), ("embed", "ssm_inner"),
+                            scale=d ** -0.5),
+        "conv_w": nn.param(ks[1], (cfg.conv_width, conv_ch),
+                           (None, "conv_ch"), scale=cfg.conv_width ** -0.5),
+        "conv_b": nn.param(ks[2], (conv_ch,), ("conv_ch",), init="zeros"),
+        "A_log": nn.param(ks[3], (h,), ("ssm_heads",), init="zeros"),
+        "D": nn.param(ks[4], (h,), ("ssm_heads",), init="ones"),
+        "dt_bias": nn.param(ks[5], (h,), ("ssm_heads",), init="zeros"),
+        "norm": nn.param(ks[6], (di,), ("ssm_inner",), init="ones"),
+        "out_proj": nn.param(ks[7], (di, d), ("ssm_inner", "embed"),
+                             scale=di ** -0.5),
+    }
+
+
+def _split(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    assert dt.shape[-1] == h
+    return z, xbc, dt
+
+
+def _causal_conv(w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba(p, x: jnp.ndarray, cfg: ModelConfig, *,
+          state: dict[str, Any] | None = None,
+          return_state: bool = False):
+    """x: (B, S, d).  ``state`` = {'conv': (B, W-1, C), 'ssd': (B,H,N,P)}
+    enables continuation (decode uses S=1 via :func:`mamba_step`)."""
+    bt, s, _ = x.shape
+    di, n, h, pdim = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    dt_ = x.dtype
+
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    z, xbc, dtp = _split(cfg, zxbcdt)
+    xbc = shard(xbc, "batch", "seq", "conv_ch")
+
+    if state is not None:
+        xbc_in = jnp.concatenate([state["conv"].astype(dt_), xbc], axis=1)
+        conv_out = _causal_conv(p["conv_w"].astype(dt_), p["conv_b"].astype(dt_),
+                                xbc_in)[:, cfg.conv_width - 1:]
+    else:
+        conv_out = _causal_conv(p["conv_w"].astype(dt_), p["conv_b"].astype(dt_), xbc)
+    xs = conv_out[..., :di].reshape(bt, s, h, pdim)
+    B = conv_out[..., di:di + n]
+    C = conv_out[..., di + n:]
+
+    dt_act = jax.nn.softplus(dtp.astype(jnp.float32) +
+                             p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    init_ssd = state["ssd"] if state is not None else None
+    chunk = cfg.ssm_chunk if s % cfg.ssm_chunk == 0 else _best_chunk(s)
+    y, ssd_state = ssd_ops.ssd_chunked(xs, dt_act, A, B, C, p["D"],
+                                       chunk=chunk, init_state=init_ssd,
+                                       return_state=True)
+    y = y.reshape(bt, s, di).astype(dt_)
+    y = nn.rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"].astype(dt_)
+    out = shard(out, "batch", "seq", None)
+    if return_state or state is not None:
+        hist = xbc if state is None else xbc_in
+        deficit = (cfg.conv_width - 1) - hist.shape[1]
+        if deficit > 0:
+            hist = jnp.pad(hist, ((0, 0), (deficit, 0), (0, 0)))
+        new_state = {"conv": hist[:, -(cfg.conv_width - 1):], "ssd": ssd_state}
+        return out, new_state
+    return out
+
+
+def mamba_step(p, x_t: jnp.ndarray, cfg: ModelConfig,
+               state: dict[str, Any]):
+    """One decode token.  x_t: (B, d)."""
+    out, new_state = mamba(p, x_t[:, None, :], cfg, state=state)
+    return out[:, 0], new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssd": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state,
+                          cfg.ssm_headdim), jnp.float32),
+    }
+
+
+def _best_chunk(s: int) -> int:
+    for c in (64, 32, 16, 8, 4, 2, 1):
+        if s % c == 0:
+            return c
+    return 1

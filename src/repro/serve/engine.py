@@ -1,0 +1,85 @@
+"""Batched serving engine: continuous prefill + decode over a KV/SSM cache.
+
+A minimal-but-real production shape: fixed-capacity batch slots, greedy or
+temperature sampling, per-slot stop handling, and stats.  prefill/decode are
+the same jitted step functions the dry-run lowers (launch/steps.py), so a
+schedule cached by SIP benefits serving directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 256
+    temperature: float = 0.0        # 0 = greedy
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig = ServeConfig()):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self._prefill = jax.jit(functools.partial(
+            M.prefill, cfg=cfg, max_len=scfg.max_len))
+        self._decode = jax.jit(functools.partial(
+            _decode_sample, cfg=cfg, temperature=scfg.temperature))
+        self.stats: dict[str, Any] = {"prefill_s": 0.0, "decode_s": 0.0,
+                                      "tokens_out": 0}
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 extra_inputs: dict[str, Any] | None = None,
+                 eos_id: int | None = None) -> np.ndarray:
+        """prompts: (B, S) int32 -> (B, <=max_new_tokens) int32."""
+        b = prompts.shape[0]
+        inputs = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_inputs:
+            inputs.update(extra_inputs)
+        key = jax.random.PRNGKey(self.scfg.seed)
+
+        t0 = time.perf_counter()
+        logits, caches = self._prefill(self.params, inputs)
+        jax.block_until_ready(logits)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+
+        out = []
+        token = _pick(logits, self.scfg.temperature, key)
+        done = np.zeros(b, bool)
+        t0 = time.perf_counter()
+        for i in range(max_new_tokens):
+            out.append(np.asarray(token))
+            if eos_id is not None:
+                done |= (out[-1] == eos_id)
+                if done.all():
+                    break
+            key, sub = jax.random.split(key)
+            token, caches = self._decode(self.params, caches, token, key=sub)
+        jax.block_until_ready(token)
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["tokens_out"] += int(np.size(out))
+        return np.stack(out, axis=1)
+
+
+def _decode_sample(params, caches, token, *, cfg: ModelConfig,
+                   temperature: float, key):
+    logits, caches = M.decode_step(params, caches, token, cfg)
+    return _pick(logits, temperature, key), caches
+
+
+def _pick(logits, temperature: float, key):
+    if temperature and temperature > 0:
+        return jax.random.categorical(key, logits / temperature, axis=-1)
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,119 @@
+"""Production training loop: jitted step, checkpoint/restart, heartbeats,
+SIP kernel-cache wiring, and metrics logging.
+
+The loop is deliberately a plain function over explicit state so that the
+FT manager can kill and relaunch it idempotently: everything it needs to
+resume is (checkpoint dir, step) — the data pipeline is stateless-resumable
+by construction (data/pipeline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.data.pipeline import DataConfig, batch_for_model
+from repro.dist import partition
+from repro.ft.manager import FTManager
+from repro.launch import steps
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_keep: int = 3
+    log_every: int = 10
+    num_microbatches: int = 1
+    async_ckpt: bool = True
+    seed: int = 0
+
+
+def make_train_state(mcfg: ModelConfig, mesh=None, seed: int = 0):
+    """(params, opt_state) initialized (sharded when a mesh is given)."""
+    key = jax.random.PRNGKey(seed)
+    if mesh is None:
+        params = nn.unwrap(M.init_lm(key, mcfg))
+        return params, adamw.init_opt_state(params)
+    ptree = M.init_lm_shapes(key, mcfg)
+    pshard = steps.param_shardings(ptree, mesh)
+    init = jax.jit(lambda k: nn.unwrap(M.init_lm(k, mcfg)),
+                   out_shardings=pshard)
+    params = init(key)
+    oshard = steps.opt_shardings(pshard, mesh)
+    opt_state = jax.jit(adamw.init_opt_state, out_shardings=oshard)(params)
+    return params, opt_state
+
+
+def train(mcfg: ModelConfig, dcfg: DataConfig, tcfg: TrainConfig,
+          ocfg: adamw.OptConfig = adamw.OptConfig(), *, mesh=None,
+          ft: FTManager | None = None,
+          on_metrics: Callable[[int, dict[str, Any]], None] | None = None):
+    """Run (or resume) training to tcfg.total_steps.  Returns final metrics."""
+    ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
+    params, opt_state = make_train_state(mcfg, mesh, tcfg.seed)
+
+    start_step = 0
+    latest = ckpt.latest_step()
+    if latest is not None:
+        shardings = None
+        if mesh is not None:
+            ptree = M.init_lm_shapes(jax.random.PRNGKey(tcfg.seed), mcfg)
+            pshard = steps.param_shardings(ptree, mesh)
+            shardings = {"params": pshard,
+                         "opt": steps.opt_shardings(pshard, mesh)}
+        state = ckpt.restore(latest,
+                             {"params": params, "opt": opt_state},
+                             shardings)
+        params, opt_state = state["params"], state["opt"]
+        start_step = latest
+        print(f"[train] resumed from step {latest}")
+
+    step_fn = functools.partial(steps.train_step, cfg=mcfg, opt_cfg=ocfg,
+                                num_microbatches=tcfg.num_microbatches)
+    jfn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    history = []
+    ctx = partition.mesh_rules(mesh) if mesh is not None else _nullctx()
+    with ctx:
+        for step in range(start_step, tcfg.total_steps):
+            batch = batch_for_model(mcfg, dcfg, step)
+            t0 = time.perf_counter()
+            params, opt_state, metrics = jfn(params, opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            metrics["step_s"] = dt
+            if ft is not None:
+                ft.heartbeat(0, dt)
+            if (step + 1) % tcfg.log_every == 0 or step == start_step:
+                print(f"[train] step {step + 1}/{tcfg.total_steps} "
+                      f"loss={metrics['loss']:.4f} "
+                      f"lr={metrics['lr']:.2e} {dt * 1e3:.0f}ms")
+            if on_metrics:
+                on_metrics(step, metrics)
+            history.append(metrics)
+            if (step + 1) % tcfg.ckpt_every == 0 or step + 1 == tcfg.total_steps:
+                ckpt.save(step + 1, {"params": params, "opt": opt_state},
+                          blocking=not tcfg.async_ckpt)
+    ckpt.wait()
+    return {"history": history, "params": params, "opt_state": opt_state,
+            "final_loss": history[-1]["loss"] if history else float("nan")}
+
+
+class _nullctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

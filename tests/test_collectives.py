@@ -1,0 +1,86 @@
+"""Quantized-collective unit tests (single-device parts) + hypothesis
+property tests on the system's numeric invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.dist.collectives import dequantize_int8, quantize_int8
+from repro.models.attention import rope
+
+
+class TestInt8Quantization:
+    def test_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((1000,)), jnp.float32)
+        q, s, pad = quantize_int8(x)
+        y = dequantize_int8(q, s, pad, x.shape)
+        # per-block symmetric int8: |err| <= scale/2 = max|block| / 254
+        err = np.max(np.abs(np.asarray(y) - np.asarray(x)))
+        assert err <= float(jnp.max(jnp.abs(x))) / 254 + 1e-7
+
+    def test_zero_preserved(self):
+        x = jnp.zeros((100,), jnp.float32)
+        q, s, pad = quantize_int8(x)
+        np.testing.assert_array_equal(
+            np.asarray(dequantize_int8(q, s, pad, x.shape)), 0.0)
+
+    @given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                                   max_side=65),
+                      elements=st.floats(-1e4, 1e4, width=32)))
+    @settings(max_examples=40, deadline=None)
+    def test_property_relative_error(self, x):
+        xj = jnp.asarray(x)
+        q, s, pad = quantize_int8(xj, block=64)
+        y = np.asarray(dequantize_int8(q, s, pad, xj.shape))
+        scale_bound = np.asarray(s).max() * 0.5 + 1e-6
+        assert np.max(np.abs(y - x)) <= scale_bound + 1e-4 * np.max(np.abs(x) + 1)
+
+
+class TestRopeProperties:
+    @given(st.integers(0, 500), st.integers(0, 500), st.integers(0, 40))
+    @settings(max_examples=25, deadline=None)
+    def test_rope_is_relative(self, p1, p2, delta):
+        """<rope(q, p1+d), rope(k, p2+d)> == <rope(q, p1), rope(k, p2)> —
+        the dot product depends only on the position difference."""
+        rng = np.random.default_rng(42)
+        q = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+        d1 = float(jnp.sum(rope(q, jnp.array([p1]), 1e4) *
+                           rope(k, jnp.array([p2]), 1e4)))
+        d2 = float(jnp.sum(rope(q, jnp.array([p1 + delta]), 1e4) *
+                           rope(k, jnp.array([p2 + delta]), 1e4)))
+        assert abs(d1 - d2) < 1e-3 * (abs(d1) + 1)
+
+    def test_rope_preserves_norm(self):
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((2, 8, 4, 64)), jnp.float32)
+        out = rope(q, jnp.arange(8), 1e4)
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(out)),
+                                   np.linalg.norm(np.asarray(q)), rtol=1e-5)
+
+
+class TestSoftmaxXentInvariants:
+    @given(hnp.arrays(np.float32, (4, 16),
+                      elements=st.floats(-30, 30, width=32)))
+    @settings(max_examples=30, deadline=None)
+    def test_xent_shift_invariance(self, logits):
+        """loss(logits + c) == loss(logits) — the model's loss must be
+        invariant to logit shifts (logsumexp formulation)."""
+        from repro.models.model import _xent
+        labels = jnp.asarray(np.arange(4) % 16, jnp.int32)
+        l1 = _xent(jnp.asarray(logits), labels)
+        l2 = _xent(jnp.asarray(logits) + 7.5, labels)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-4, atol=1e-4)
+
+    @given(st.integers(0, 15))
+    @settings(max_examples=15, deadline=None)
+    def test_xent_nonnegative_and_exact_for_onehot(self, label):
+        from repro.models.model import _xent
+        logits = jnp.full((1, 16), -30.0).at[0, label].set(30.0)
+        l = float(_xent(logits, jnp.asarray([label], jnp.int32))[0])
+        assert 0 <= l < 1e-6

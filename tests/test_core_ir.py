@@ -1,0 +1,145 @@
+"""Unit + property tests for the SIP instruction IR and schedule legality."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ir import Instr, Kind, Program
+
+
+def _ld(name, out, buf="A", nbytes=1024):
+    return Instr(name=name, kind=Kind.MEM, inputs=(), outputs=(out,),
+                 fn=lambda env, o=out: {o: env.get("_seed", 1.0)},
+                 buffer=buf, bytes=nbytes)
+
+
+def _st(name, src, buf="O", nbytes=1024):
+    return Instr(name=name, kind=Kind.MEM, inputs=(src,), outputs=(),
+                 fn=lambda env, s=src: {"_stored": env[s]},
+                 buffer=buf, is_store=True, bytes=nbytes)
+
+
+def _add(name, a, b, out):
+    return Instr(name=name, kind=Kind.COMPUTE, inputs=(a, b), outputs=(out,),
+                 fn=lambda env, a=a, b=b, o=out: {o: env[a] + env[b]},
+                 flops=1)
+
+
+def chain_program():
+    return Program([
+        _ld("ld_a", "a"),
+        _ld("ld_b", "b", buf="B"),
+        _add("add0", "a", "b", "c"),
+        _ld("ld_d", "d", buf="D"),
+        _add("add1", "c", "d", "e"),
+        _st("st_e", "e"),
+    ])
+
+
+class TestDependencies:
+    def test_raw_edges(self):
+        p = chain_program()
+        # add0 depends on both loads
+        assert {0, 1} <= p.deps[2]
+        # add1 depends on add0 and ld_d
+        assert {2, 3} <= p.deps[4]
+        # store depends on add1
+        assert 4 in p.deps[5]
+
+    def test_default_order_legal(self):
+        p = chain_program()
+        assert p.is_legal(p.default_order())
+
+    def test_illegal_order_detected(self):
+        p = chain_program()
+        order = list(p.default_order())
+        order[0], order[2] = order[2], order[0]  # add before its loads
+        assert not p.is_legal(order)
+
+    def test_war_edge(self):
+        # i0 reads x, i1 overwrites x -> i1 must stay after i0
+        i0 = _add("use_x", "x", "x", "y")
+        i1 = _ld("clobber_x", "x")
+        p = Program([i0, i1])
+        assert 0 in p.deps[1]
+        assert p.move(p.default_order(), 1, -1) is None
+
+    def test_store_orders_against_buffer_accesses(self):
+        p = Program([
+            _ld("ld1", "a", buf="BUF"),
+            _st("st1", "a", buf="BUF"),
+            _ld("ld2", "b", buf="BUF"),
+        ])
+        assert 0 in p.deps[1]   # store after load of same buffer
+        assert 1 in p.deps[2]   # later load after store
+
+    def test_duplicate_names_rejected(self):
+        with pytest.raises(ValueError):
+            Program([_ld("x", "a"), _ld("x", "b", buf="B")])
+
+
+class TestMoves:
+    def test_move_up_is_paper_action(self):
+        p = chain_program()
+        # ld_d (idx 3) can move up past add0 (no dependency)
+        order = p.move(p.default_order(), 3, -1)
+        assert order is not None and p.is_legal(order)
+        assert order.index(3) == 2
+
+    def test_move_blocked_by_dependency(self):
+        p = chain_program()
+        # store cannot move above add1
+        assert p.move(p.default_order(), 5, -1) is None
+
+    def test_out_of_range(self):
+        p = chain_program()
+        assert p.move(p.default_order(), 0, -1) is None
+
+    def test_legal_moves_only_mem(self):
+        p = chain_program()
+        moved = {idx for idx, _ in p.legal_moves(p.default_order())}
+        assert moved <= set(p.mem_indices())
+
+    def test_execute_respects_order_and_value(self):
+        p = chain_program()
+        env = p.execute({"_seed": 2.0})
+        assert env["_stored"] == 2.0 + 2.0 + 2.0  # a+b+d
+
+    def test_execute_rejects_illegal(self):
+        p = chain_program()
+        order = list(p.default_order())
+        order[0], order[2] = order[2], order[0]
+        with pytest.raises(ValueError):
+            p.execute({}, order)
+
+
+@st.composite
+def random_walks(draw):
+    n_moves = draw(st.integers(min_value=0, max_value=40))
+    seeds = draw(st.lists(st.integers(0, 2**31 - 1), min_size=1, max_size=1))
+    return n_moves, seeds[0]
+
+
+class TestProperties:
+    @given(random_walks())
+    @settings(max_examples=50, deadline=None)
+    def test_random_legal_walk_stays_legal_and_correct(self, walk):
+        """Invariant: any sequence of paper-actions keeps the schedule legal
+        and the executed result identical (dependency-legal reorders are
+        semantics-preserving)."""
+        n_moves, seed = walk
+        rng = np.random.default_rng(seed)
+        p = chain_program()
+        order = p.default_order()
+        base = p.execute({"_seed": 3.0})["_stored"]
+        for _ in range(n_moves):
+            moves = p.legal_moves(order)
+            if not moves:
+                break
+            idx, d = moves[int(rng.integers(len(moves)))]
+            new = p.move(order, idx, d)
+            assert new is not None
+            order = new
+            assert p.is_legal(order)
+        assert p.execute({"_seed": 3.0}, order)["_stored"] == base

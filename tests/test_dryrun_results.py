@@ -1,0 +1,112 @@
+"""Self-check of the shipped dry-run results (deliverables e/g).
+
+Validates dryrun_results.json: every one of the 40 cells x 2 meshes is
+present as 'ok' or policy-'skipped', roofline terms are positive and
+consistent, and the §Perf hillclimb variants exist with their claimed
+improvements.  Skipped gracefully if the sweep has not been run."""
+
+import json
+import os
+
+import pytest
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results.json")
+
+
+@pytest.fixture(scope="module")
+def results():
+    if not os.path.exists(RESULTS):
+        pytest.skip("dryrun_results.json not present — run "
+                    "python -m repro.launch.dryrun --all --mesh both")
+    with open(RESULTS) as f:
+        return json.load(f)
+
+
+def _base(results):
+    return {k: v for k, v in results.items() if "#" not in k}
+
+
+class TestSweepCompleteness:
+    def test_all_80_cells_present(self, results):
+        from repro import configs
+        base = _base(results)
+        missing = []
+        for name, _, shape, _, _ in configs.cells():
+            for mesh in ("single", "multi"):
+                if f"{name}|{shape.name}|{mesh}" not in base:
+                    missing.append((name, shape.name, mesh))
+        assert not missing, missing
+
+    def test_no_errors(self, results):
+        bad = {k: v.get("error") for k, v in _base(results).items()
+               if v["status"] == "error"}
+        assert not bad, bad
+
+    def test_skips_match_policy(self, results):
+        from repro import configs
+        base = _base(results)
+        expected_skips = {(n, s.name) for n, _, s, ok, _ in configs.cells()
+                          if not ok}
+        actual = {(v["arch"], v["shape"]) for v in base.values()
+                  if v["status"] == "skipped"}
+        assert actual == expected_skips
+
+    def test_ok_count_is_66(self, results):
+        base = _base(results)
+        assert sum(1 for v in base.values() if v["status"] == "ok") == 66
+
+
+class TestRooflineConsistency:
+    def test_terms_positive_and_dominant_valid(self, results):
+        for k, v in _base(results).items():
+            if v["status"] != "ok":
+                continue
+            t = v["roofline"]
+            assert t["compute_s"] >= 0 and t["memory_s"] > 0, k
+            assert t["dominant"] in ("compute_s", "memory_s", "collective_s"), k
+            assert t[t["dominant"]] == max(
+                t["compute_s"], t["memory_s"], t["collective_s"]), k
+
+    def test_useful_flops_in_range(self, results):
+        for k, v in _base(results).items():
+            if v["status"] != "ok":
+                continue
+            uf = v.get("useful_flops_ratio")
+            assert uf is not None and 0 < uf < 1.5, (k, uf)
+
+    def test_param_counts_match_scale(self, results):
+        base = _base(results)
+        r = base.get("dbrx-132b|train_4k|single")
+        assert 120e9 < r["params_total"] < 145e9     # ~132B
+        assert r["params_active"] < r["params_total"] / 2   # top-4 of 16
+        r = base.get("qwen3-1.7b|train_4k|single")
+        assert 1.5e9 < r["params_total"] < 2.5e9
+
+    def test_chips(self, results):
+        for k, v in _base(results).items():
+            if v["status"] != "ok":
+                continue
+            assert v["chips"] == (512 if v["mesh"] == "multi" else 256), k
+
+
+class TestPerfVariants:
+    def test_cell_a_ladder(self, results):
+        base = results["llama4-scout-17b-16e|train_4k|single"]
+        best = results.get("llama4-scout-17b-16e|train_4k|single#pad48_dots_v2")
+        assert best and best["status"] == "ok"
+        assert best["roofline"]["memory_s"] < 0.30 * base["roofline"]["memory_s"]
+        assert best["useful_flops_ratio"] > 5 * base["useful_flops_ratio"]
+
+    def test_cell_b_collective_drop(self, results):
+        base = results["dbrx-132b|train_4k|multi"]
+        best = results.get("dbrx-132b|train_4k|multi#dots")
+        assert best and best["status"] == "ok"
+        assert best["roofline"]["collective_s"] < \
+            0.2 * base["roofline"]["collective_s"]
+
+    def test_cell_c_sp(self, results):
+        base = results["qwen3-4b|prefill_32k|single"]
+        sp = results.get("qwen3-4b|prefill_32k|single#sp")
+        assert sp and sp["status"] == "ok"
+        assert sp["roofline"]["compute_s"] < base["roofline"]["compute_s"]
+        assert sp["roofline"]["collective_s"] < base["roofline"]["collective_s"]

@@ -1,0 +1,102 @@
+"""Dry-run machinery tests that don't need 512 devices: collective parsing,
+cost extrapolation arithmetic, cell enumeration, and a REAL single-cell
+lower+compile in a 512-device subprocess (slow, exercised fully by
+`python -m repro.launch.dryrun --all`)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+class TestCollectiveParsing:
+    def _parse(self, text):
+        # import inside: repro.launch.dryrun sets XLA_FLAGS at import, which
+        # is harmless here (jax is already initialized by other tests)
+        from repro.launch import dryrun
+        return dryrun.parse_collectives(text)
+
+    def test_basic_ops(self):
+        hlo = """
+  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(%x), replica_groups={}
+  %all-gather.2 = bf16[64,128]{1,0} all-gather(%y), dimensions={0}
+  %reduce-scatter.3 = f32[32]{0} reduce-scatter(%z), dimensions={0}
+  %collective-permute.4 = bf16[16,16]{1,0} collective-permute(%w)
+  %add.5 = f32[4]{0} add(%a, %b)
+"""
+        c = self._parse(hlo)
+        assert c["all-reduce"] == 2.0 * 1024 * 512 * 4       # weight 2x
+        assert c["all-gather"] == 64 * 128 * 2
+        assert c["reduce-scatter"] == 32 * 4
+        assert c["collective-permute"] == 16 * 16 * 2
+        assert c["total"] == sum(c[k] for k in
+                                 ("all-reduce", "all-gather", "reduce-scatter",
+                                  "all-to-all", "collective-permute"))
+
+    def test_async_start_done_counted_once(self):
+        hlo = """
+  %all-gather-start.1 = bf16[8,8]{1,0} all-gather-start(%x)
+  %all-gather-done.1 = bf16[8,8]{1,0} all-gather-done(%all-gather-start.1)
+"""
+        c = self._parse(hlo)
+        assert c["all-gather"] == 8 * 8 * 2
+
+    def test_tuple_shapes(self):
+        hlo = "  %all-reduce.9 = (f32[10]{0}, f32[20]{0}) all-reduce(%a, %b)\n"
+        c = self._parse(hlo)
+        assert c["all-reduce"] == 2.0 * (10 + 20) * 4
+
+    def test_non_collectives_ignored(self):
+        c = self._parse("  %fusion.1 = f32[100]{0} fusion(%x), kind=kLoop\n")
+        assert c["total"] == 0
+
+
+class TestProbeExtrapolation:
+    def test_probe_cfg_families(self):
+        from repro import configs
+        from repro.launch.dryrun import probe_cfg
+        c1, units = probe_cfg(configs.get("qwen3-1.7b"), 1)
+        assert c1.n_layers == 1 and units == 28 and not c1.scan_layers
+        ch, uh = probe_cfg(configs.get("zamba2-7b"), 2)
+        assert ch.n_layers == 12 and uh == pytest.approx(81 / 6)
+        ce, ue = probe_cfg(configs.get("seamless-m4t-large-v2"), 2)
+        assert (ce.enc_layers, ce.dec_layers, ue) == (2, 2, 24)
+
+    def test_linear_extrapolation_math(self):
+        # cost(L) = c1 + (L-1)(c2-c1): exact for layered costs a + L*b
+        a, b, L = 7.0, 3.0, 40
+        c1, c2 = a + b, a + 2 * b
+        assert c1 + (L - 1) * (c2 - c1) == a + L * b
+
+
+class TestCells:
+    def test_40_cells(self):
+        from repro import configs
+        cells = list(configs.cells())
+        assert len(cells) == 40
+        runnable = [c for c in cells if c[3]]
+        skipped = [c for c in cells if not c[3]]
+        assert len(skipped) == 7          # 7 full-attn archs skip long_500k
+        assert all(s.name == "long_500k" for _, _, s, ok, _ in skipped)
+        assert len(runnable) == 33
+
+
+@pytest.mark.slow
+class TestRealDryRunCell:
+    def test_one_cell_compiles_on_512_devices(self, tmp_path):
+        """Full fidelity: run one real dry-run cell in a subprocess."""
+        out = str(tmp_path / "r.json")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+             "h2o-danube-1.8b", "--shape", "long_500k", "--mesh", "multi",
+             "--out", out],
+            env=env, capture_output=True, text=True, timeout=1200)
+        assert r.returncode == 0, r.stderr[-2000:]
+        rec = json.load(open(out))["h2o-danube-1.8b|long_500k|multi"]
+        assert rec["status"] == "ok", rec
+        assert rec["chips"] == 512
+        assert rec["flops_per_device"] > 0

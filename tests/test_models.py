@@ -1,0 +1,204 @@
+"""Model-family behaviour tests: forward shapes, grads, decode parity.
+
+Decode parity is the strongest invariant we have: prefill(prompt[:-1]) +
+decode_step(prompt[-1]) must reproduce forward(prompt)[:, -1] exactly (the
+caches are an algebraic rearrangement, not an approximation).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+
+B, S, V = 2, 32, 256
+RNG = np.random.default_rng(0)
+
+
+def toks():
+    return {"tokens": jnp.asarray(RNG.integers(0, V, (B, S)), jnp.int32),
+            "labels": jnp.asarray(RNG.integers(0, V, (B, S)), jnp.int32)}
+
+
+CFGS = {
+    "dense_qknorm": ModelConfig(name="d", family="dense", n_layers=2,
+                                d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                                vocab=V, qk_norm=True, dtype="float32"),
+    "dense_swa": ModelConfig(name="swa", family="dense", n_layers=2,
+                             d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                             vocab=V, window=16, dtype="float32"),
+    "moe": ModelConfig(name="m", family="moe", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab=V,
+                       n_experts=4, top_k=2, capacity_factor=4.0,
+                       dtype="float32"),
+    "ssm": ModelConfig(name="s", family="ssm", n_layers=2, d_model=64,
+                       n_heads=0, n_kv_heads=0, d_ff=0, vocab=V,
+                       ssm_state=16, ssm_headdim=32, ssm_chunk=16,
+                       dtype="float32"),
+    "hybrid": ModelConfig(name="h", family="hybrid", n_layers=5, d_model=64,
+                          n_heads=4, n_kv_heads=4, d_ff=128, vocab=V,
+                          ssm_state=16, ssm_headdim=32, ssm_chunk=16,
+                          hybrid_group=2, hybrid_attn_every=2,
+                          dtype="float32"),
+}
+
+
+def _params(cfg):
+    return nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg.validate()))
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", list(CFGS))
+    def test_logits_shape_and_finite(self, name):
+        cfg = CFGS[name]
+        params = _params(cfg)
+        logits, aux = M.forward(params, toks(), cfg)
+        assert logits.shape == (B, S, V)
+        assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+        assert set(aux) == {"load_balance", "router_z"}
+
+    @pytest.mark.parametrize("name", list(CFGS))
+    def test_grads_finite_nonzero(self, name):
+        cfg = CFGS[name]
+        params = _params(cfg)
+        g = jax.grad(lambda p: M.loss_fn(p, toks(), cfg)[0])(params)
+        gn = sum(float(jnp.sum(x.astype(jnp.float32) ** 2))
+                 for x in jax.tree.leaves(g))
+        assert np.isfinite(gn) and gn > 0
+
+    def test_causality(self):
+        """Future tokens must not influence past logits."""
+        cfg = CFGS["dense_qknorm"]
+        params = _params(cfg)
+        t1 = toks()
+        t2 = {**t1, "tokens": t1["tokens"].at[:, -1].set(0)}
+        l1, _ = M.forward(params, t1, cfg)
+        l2, _ = M.forward(params, t2, cfg)
+        np.testing.assert_allclose(np.asarray(l1[:, :-1]),
+                                   np.asarray(l2[:, :-1]), rtol=1e-5)
+
+    def test_ssm_causality(self):
+        cfg = CFGS["ssm"]
+        params = _params(cfg)
+        t1 = toks()
+        t2 = {**t1, "tokens": t1["tokens"].at[:, -1].set(0)}
+        l1, _ = M.forward(params, t1, cfg)
+        l2, _ = M.forward(params, t2, cfg)
+        np.testing.assert_allclose(np.asarray(l1[:, :-1]),
+                                   np.asarray(l2[:, :-1]), rtol=1e-5)
+
+    def test_scan_vs_unrolled_identical(self):
+        import dataclasses
+        cfg = CFGS["dense_qknorm"]
+        params = _params(cfg)
+        b = toks()
+        l1, _ = M.forward(params, b, cfg)
+        cfg2 = dataclasses.replace(cfg, scan_layers=False)
+        l2, _ = M.forward(params, b, cfg2)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_logits_microbatch_identical(self):
+        import dataclasses
+        cfg = CFGS["dense_qknorm"]
+        params = _params(cfg)
+        b = toks()
+        l1, _ = M.loss_fn(params, b, cfg)
+        l2, _ = M.loss_fn(params, b,
+                          dataclasses.replace(cfg, logits_microbatch=4))
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+class TestDecodeParity:
+    @pytest.mark.parametrize("name", list(CFGS))
+    def test_one_step(self, name):
+        cfg = CFGS[name]
+        params = _params(cfg)
+        t = toks()["tokens"]
+        full, _ = M.forward(params, {"tokens": t}, cfg)
+        _, caches = M.prefill(params, {"tokens": t[:, :-1]}, cfg,
+                              max_len=S + 4)
+        got, _ = M.decode_step(params, caches, t[:, -1], cfg)
+        want = np.asarray(full[:, -1], np.float32)
+        np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("name", ["dense_swa", "ssm", "hybrid"])
+    def test_multi_step(self, name):
+        """Teacher-forced decode over the last 8 tokens matches forward."""
+        cfg = CFGS[name]
+        params = _params(cfg)
+        t = toks()["tokens"]
+        full, _ = M.forward(params, {"tokens": t}, cfg)
+        k = 8
+        _, caches = M.prefill(params, {"tokens": t[:, :-k]}, cfg,
+                              max_len=S + 4)
+        for i in range(k):
+            got, caches = M.decode_step(params, caches, t[:, S - k + i], cfg)
+            want = np.asarray(full[:, S - k + i], np.float32)
+            np.testing.assert_allclose(np.asarray(got, np.float32), want,
+                                       rtol=5e-4, atol=5e-4)
+
+    def test_swa_rolling_cache(self):
+        """A window-sized ring-buffer cache must match the full-cache result."""
+        cfg = CFGS["dense_swa"]          # window 16 < S
+        params = _params(cfg)
+        t = toks()["tokens"]
+        full, _ = M.forward(params, {"tokens": t}, cfg)
+        # max_len == window -> rolling cache path
+        _, caches = M.prefill(params, {"tokens": t[:, :-1]}, cfg,
+                              max_len=cfg.window)
+        assert caches["k"].shape[2] == cfg.window
+        got, _ = M.decode_step(params, caches, t[:, -1], cfg)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(full[:, -1], np.float32),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestEncDec:
+    CFG = ModelConfig(name="e", family="enc_dec", n_layers=4, d_model=64,
+                      n_heads=4, n_kv_heads=4, d_ff=128, vocab=V,
+                      enc_layers=2, dec_layers=2, enc_len=16,
+                      input_mode="embeddings", dtype="float32")
+
+    def _inputs(self):
+        return {"enc_embeds": jnp.asarray(
+                    RNG.standard_normal((B, 16, 64)), jnp.float32),
+                "tokens": jnp.asarray(RNG.integers(0, V, (B, S)), jnp.int32),
+                "labels": jnp.asarray(RNG.integers(0, V, (B, S)), jnp.int32)}
+
+    def test_forward_and_grad(self):
+        cfg = self.CFG.validate()
+        params = _params(cfg)
+        logits, _ = M.forward(params, self._inputs(), cfg)
+        assert logits.shape == (B, S, V)
+        g = jax.grad(lambda p: M.loss_fn(p, self._inputs(), cfg)[0])(params)
+        assert all(np.all(np.isfinite(np.asarray(x, np.float32)))
+                   for x in jax.tree.leaves(g))
+
+    def test_decode_parity(self):
+        cfg = self.CFG.validate()
+        params = _params(cfg)
+        inp = self._inputs()
+        full, _ = M.forward(params, inp, cfg)
+        _, caches = M.prefill(params, {"enc_embeds": inp["enc_embeds"],
+                                       "tokens": inp["tokens"][:, :-1]},
+                              cfg, max_len=S + 4)
+        got, _ = M.decode_step(params, caches, inp["tokens"][:, -1], cfg)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(full[:, -1], np.float32),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_encoder_is_bidirectional(self):
+        """Changing a late encoder frame must change early decoder logits."""
+        cfg = self.CFG.validate()
+        params = _params(cfg)
+        inp = self._inputs()
+        l1, _ = M.forward(params, inp, cfg)
+        inp2 = dict(inp)
+        inp2["enc_embeds"] = inp["enc_embeds"].at[:, -1].add(1.0)
+        l2, _ = M.forward(params, inp2, cfg)
+        assert not np.allclose(np.asarray(l1[:, 0]), np.asarray(l2[:, 0]))

@@ -1,0 +1,106 @@
+"""Exactness tests for the §Perf hillclimbing levers — every optimization
+must be a semantics-preserving transformation."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+
+RNG = np.random.default_rng(11)
+BASE = ModelConfig(name="p", family="dense", n_layers=2, d_model=64,
+                   n_heads=5, n_kv_heads=1, head_dim=16, d_ff=128, vocab=128,
+                   dtype="float32")
+
+
+def _toks(cfg, b=2, s=16):
+    return {"tokens": jnp.asarray(RNG.integers(0, cfg.vocab, (b, s)),
+                                  jnp.int32),
+            "labels": jnp.asarray(RNG.integers(0, cfg.vocab, (b, s)),
+                                  jnp.int32)}
+
+
+class TestPaddedHeads:
+    def test_padded_heads_exact(self):
+        """Zero-padded heads (for model-axis divisibility) contribute
+        nothing: slicing them away reproduces the same logits."""
+        cfg_pad = dataclasses.replace(BASE, padded_heads=8)
+        p_pad = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg_pad))
+        toks = _toks(BASE)
+        l_pad, _ = M.forward(p_pad, toks, cfg_pad)
+        p_sliced = dict(p_pad)
+        p_sliced["blocks"] = dict(p_pad["blocks"])
+        p_sliced["blocks"]["attn"] = dict(p_pad["blocks"]["attn"])
+        p_sliced["blocks"]["attn"]["wq"] = p_pad["blocks"]["attn"]["wq"][:, :, :5, :]
+        p_sliced["blocks"]["attn"]["wo"] = p_pad["blocks"]["attn"]["wo"][:, :5, :, :]
+        l_ref, _ = M.forward(p_sliced, toks, BASE)
+        np.testing.assert_allclose(np.asarray(l_pad), np.asarray(l_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_padded_decode_parity(self):
+        cfg = dataclasses.replace(BASE, padded_heads=8)
+        p = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+        t = _toks(cfg)["tokens"]
+        full, _ = M.forward(p, {"tokens": t}, cfg)
+        _, caches = M.prefill(p, {"tokens": t[:, :-1]}, cfg, max_len=20)
+        got, _ = M.decode_step(p, caches, t[:, -1], cfg)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, -1]),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_padded_heads_stay_zero_under_training(self):
+        """Grads through zeroed wo rows are zero, so padding survives SGD."""
+        cfg = dataclasses.replace(BASE, padded_heads=8)
+        p = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+        g = jax.grad(lambda q: M.loss_fn(q, _toks(cfg), cfg)[0])(p)
+        np.testing.assert_array_equal(
+            np.asarray(g["blocks"]["attn"]["wq"][:, :, 5:, :]), 0.0)
+        np.testing.assert_array_equal(
+            np.asarray(g["blocks"]["attn"]["wo"][:, 5:, :, :]), 0.0)
+
+    def test_gqa_mapping_preserved(self):
+        """The explicit kv map keeps the ORIGINAL i//group assignment for
+        real heads (padding must not silently re-group GQA)."""
+        from repro.models.attention import kv_head_map
+        cfg = ModelConfig(name="g", family="dense", n_layers=1, d_model=64,
+                          n_heads=40, n_kv_heads=8, head_dim=16, d_ff=64,
+                          vocab=64, padded_heads=48)
+        idx = np.asarray(kv_head_map(cfg))
+        assert idx.shape == (48,)
+        np.testing.assert_array_equal(idx[:40], np.arange(40) // 5)
+
+
+class TestRematPolicies:
+    @pytest.mark.parametrize("policy", ["full", "dots", "none"])
+    def test_policies_identical_logits(self, policy):
+        cfg = dataclasses.replace(BASE, remat_policy=policy)
+        p = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+        toks = _toks(cfg)
+        l, _ = M.forward(p, toks, cfg)
+        l0, _ = M.forward(p, toks, BASE)
+        np.testing.assert_allclose(np.asarray(l), np.asarray(l0),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("policy", ["dots", "none"])
+    def test_policies_same_grads(self, policy):
+        cfg = dataclasses.replace(BASE, remat_policy=policy)
+        p = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+        toks = _toks(cfg)
+        g0 = jax.grad(lambda q: M.loss_fn(q, toks, BASE)[0])(p)
+        g1 = jax.grad(lambda q: M.loss_fn(q, toks, cfg)[0])(p)
+        for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-5)
+
+
+class TestParamDtype:
+    def test_bf16_params_init_and_run(self):
+        cfg = dataclasses.replace(BASE, param_dtype="bfloat16")
+        p = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+        assert p["embed"].dtype == jnp.bfloat16
+        l, _ = M.forward(p, _toks(cfg), cfg)
+        assert np.all(np.isfinite(np.asarray(l, np.float32)))

@@ -1,0 +1,45 @@
+"""Pipeline-parallelism building block: parity + bubble accounting.
+
+The multi-device parity test runs in an 8-device subprocess (same pattern
+as test_sharding_multidevice)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.dist.pipeline import bubble_fraction
+
+SUBPROC = os.path.join(os.path.dirname(__file__), "pipeline_subprocess.py")
+
+
+class TestBubble:
+    def test_bubble_fraction(self):
+        assert bubble_fraction(1, 4) == 0.0
+        assert bubble_fraction(4, 4) == pytest.approx(3 / 7)
+        assert bubble_fraction(4, 28) == pytest.approx(3 / 31)
+
+    def test_more_microbatches_shrink_bubble(self):
+        assert bubble_fraction(8, 64) < bubble_fraction(8, 8)
+
+
+@pytest.mark.slow
+class TestPipelineParity:
+    def _run(self, mode):
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+        out = subprocess.run([sys.executable, SUBPROC, mode], env=env,
+                             capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return json.loads(out.stdout.strip().splitlines()[-1])
+
+    def test_forward_parity(self):
+        r = self._run("forward")
+        assert r["max_err"] < 1e-5, r
+
+    def test_grad_parity(self):
+        r = self._run("grad")
+        assert r["max_rel_err"] < 1e-4, r

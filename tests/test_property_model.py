@@ -1,0 +1,100 @@
+"""Hypothesis property tests on higher-level system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+
+MOE = ModelConfig(name="m", family="moe", n_layers=1, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab=64, n_experts=4, top_k=2,
+                  capacity_factor=4.0, dtype="float32").validate()
+DENSE = ModelConfig(name="d", family="dense", n_layers=2, d_model=32,
+                    n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                    dtype="float32").validate()
+
+_P = {}
+
+
+def params_for(cfg):
+    if cfg.name not in _P:
+        _P[cfg.name] = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+    return _P[cfg.name]
+
+
+class TestBatchInvariance:
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_dense_batch_permutation_equivariance(self, seed):
+        """Permuting the batch permutes the logits — no cross-example
+        leakage anywhere in the stack."""
+        rng = np.random.default_rng(seed)
+        toks = jnp.asarray(rng.integers(0, 64, (4, 12)), jnp.int32)
+        perm = rng.permutation(4)
+        p = params_for(DENSE)
+        l1, _ = M.forward(p, {"tokens": toks}, DENSE)
+        l2, _ = M.forward(p, {"tokens": toks[perm]}, DENSE)
+        np.testing.assert_allclose(np.asarray(l1)[perm], np.asarray(l2),
+                                   rtol=1e-4, atol=1e-5)
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=6, deadline=None)
+    def test_moe_dropless_token_determinism(self, seed):
+        """With dropless capacity, duplicating a sequence in the batch
+        yields identical logits for the duplicates (routing is per-token)."""
+        rng = np.random.default_rng(seed)
+        row = rng.integers(0, 64, (1, 12))
+        toks = jnp.asarray(np.concatenate([row, row], 0), jnp.int32)
+        p = params_for(MOE)
+        l, _ = M.forward(p, {"tokens": toks}, MOE)
+        np.testing.assert_allclose(np.asarray(l[0]), np.asarray(l[1]),
+                                   rtol=1e-4, atol=1e-5)
+
+
+class TestLossProperties:
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_loss_positive_and_bounded_by_uniform(self, seed):
+        """0 < loss and at init loss ≈≤ log(vocab) + slack (sane init)."""
+        rng = np.random.default_rng(seed)
+        b = {"tokens": jnp.asarray(rng.integers(0, 64, (2, 16)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 64, (2, 16)), jnp.int32)}
+        loss, _ = M.loss_fn(params_for(DENSE), b, DENSE)
+        assert 0 < float(loss) < np.log(64) + 3.0
+
+    @given(st.floats(0.1, 10.0))
+    @settings(max_examples=8, deadline=None)
+    def test_mask_scaling_invariance(self, scale):
+        """Scaling a uniform mask leaves the mean loss unchanged."""
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, 64, (2, 16)), jnp.int32)
+        labels = jnp.asarray(rng.integers(0, 64, (2, 16)), jnp.int32)
+        p = params_for(DENSE)
+        l1, _ = M.loss_fn(p, {"tokens": toks, "labels": labels,
+                              "mask": jnp.ones((2, 16))}, DENSE)
+        l2, _ = M.loss_fn(p, {"tokens": toks, "labels": labels,
+                              "mask": jnp.full((2, 16), scale)}, DENSE)
+        np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+class TestSSDProperties:
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=8, deadline=None)
+    def test_ssd_linearity_in_x(self, seed):
+        """SSD is linear in x for fixed (dt, A, B, C, D=0)."""
+        from repro.kernels.ssd import ops
+        rng = np.random.default_rng(seed)
+        bt, s, h, p, n = 1, 32, 2, 4, 8
+        x = rng.standard_normal((bt, s, h, p)).astype(np.float32)
+        dt = (np.abs(rng.standard_normal((bt, s, h))) * 0.1 + 0.01).astype(np.float32)
+        A = -np.abs(rng.standard_normal(h)).astype(np.float32)
+        B = (rng.standard_normal((bt, s, n)) * 0.3).astype(np.float32)
+        C = (rng.standard_normal((bt, s, n)) * 0.3).astype(np.float32)
+        D = np.zeros(h, np.float32)
+        y1 = np.asarray(ops.ssd_chunked(x, dt, A, B, C, D, chunk=16))
+        y2 = np.asarray(ops.ssd_chunked(2.0 * x, dt, A, B, C, D, chunk=16))
+        np.testing.assert_allclose(y2, 2.0 * y1, rtol=1e-4, atol=1e-5)

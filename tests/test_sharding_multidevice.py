@@ -1,0 +1,84 @@
+"""Sharding correctness on a real (placeholder-device) mesh.
+
+These tests need >1 device, which requires XLA_FLAGS before jax initializes —
+so they run in a SUBPROCESS with --xla_force_host_platform_device_count=8
+and assert on its output.  Covered: partition rules, sharded-vs-single-device
+numeric equivalence of a train step, compressed gradient collectives, and
+elastic checkpoint resharding across different mesh shapes.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SUBPROC = os.path.join(os.path.dirname(__file__), "sharded_subprocess.py")
+
+
+def run_subproc(mode: str) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, SUBPROC, mode], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+class TestShardedExecution:
+    def test_train_step_sharded_matches_single(self):
+        r = run_subproc("train_parity")
+        assert r["max_rel_err"] < 2e-4, r
+
+    def test_compressed_psum_close_to_exact(self):
+        r = run_subproc("compressed_psum")
+        assert r["rel_err"] < 2e-2, r
+        assert r["exact_is_exact"] < 1e-6, r
+
+    def test_elastic_reshard_roundtrip(self):
+        r = run_subproc("elastic")
+        assert r["identical"] is True, r
+
+
+class TestPartitionRules:
+    def test_resolve_spec_rules(self):
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.partition import resolve_spec
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        assert resolve_spec(("vocab", "embed"), mesh) == P("model", "data")
+        assert resolve_spec(("batch", "seq", None), mesh) == P("data", None, None)
+
+    def test_divisibility_fallback(self):
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.partition import resolve_spec
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        # dims of size 1 cannot shard over axes of size 1? size 1 % 1 == 0,
+        # so this passes; use a fake larger mesh on 1 device is impossible —
+        # exercise the arithmetic directly instead.
+        assert resolve_spec(("heads",), mesh, shape=(7,)) == P("model")
+
+    def test_no_axis_reuse_in_one_spec(self):
+        import jax
+        from repro.dist.partition import resolve_spec
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        spec = resolve_spec(("vocab", "mlp"), mesh)   # both map to 'model'
+        used = [s for s in spec if s is not None]
+        assert len(used) == len(set(used)) == 1
+
+    def test_pod_dropped_on_single_pod_mesh(self):
+        import jax
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.partition import resolve_spec
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        assert resolve_spec(("batch",), mesh) == P("data")
+
+    def test_shard_noop_without_mesh(self):
+        import jax.numpy as jnp
+        from repro.dist.partition import shard
+        x = jnp.ones((4, 4))
+        assert shard(x, "batch", None) is x

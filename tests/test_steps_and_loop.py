@@ -1,0 +1,126 @@
+"""Train-step / serve-step contracts and the end-to-end loop with
+checkpoint/restart determinism."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.pipeline import DataConfig
+from repro.launch import steps
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.train.loop import TrainConfig, make_train_state, train
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                   dtype="float32")
+
+
+def _batch(b=4, s=16, vocab=128, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, vocab, (b, s)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, vocab, (b, s)), jnp.int32)}
+
+
+class TestTrainStep:
+    def test_microbatch_equivalence(self):
+        """num_microbatches=1 vs 4 must produce (near-)identical updates."""
+        params, opt = make_train_state(TINY)
+        batch = _batch(8)
+        p1, o1, m1 = steps.train_step(params, opt, batch, cfg=TINY,
+                                      opt_cfg=adamw.OptConfig(),
+                                      num_microbatches=1)
+        p4, o4, m4 = steps.train_step(params, opt, batch, cfg=TINY,
+                                      opt_cfg=adamw.OptConfig(),
+                                      num_microbatches=4)
+        assert m1["loss"] == pytest.approx(float(m4["loss"]), rel=1e-5)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=2e-5)
+
+    def test_loss_decreases_over_steps(self):
+        params, opt = make_train_state(TINY)
+        batch = _batch(8)                       # overfit one batch
+        jfn = jax.jit(lambda p, o, b: steps.train_step(
+            p, o, b, cfg=TINY,
+            opt_cfg=adamw.OptConfig(peak_lr=1e-2, warmup_steps=1)))
+        losses = []
+        for _ in range(20):
+            params, opt, m = jfn(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.5
+
+    @pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-2.7b",
+                                      "zamba2-7b", "dbrx-132b",
+                                      "seamless-m4t-large-v2"])
+    def test_cache_sds_matches_prefill_structure(self, arch):
+        """cache_sds must predict prefill's cache pytree exactly (this is the
+        contract the decode dry-run relies on)."""
+        cfg = configs.get_smoke(arch)
+        max_len = 48
+        key = jax.random.PRNGKey(0)
+        pspecs = nn.unwrap(M.init_lm_shapes(key, cfg))
+        batch = steps.batch_sds(
+            cfg, configs.ShapeSpec("t", "prefill", 32, 2), with_labels=False)
+        _, cache_shapes = jax.eval_shape(
+            lambda p, b: M.prefill(p, b, cfg, max_len=max_len), pspecs, batch)
+        predicted = steps.cache_sds(cfg, 2, max_len)
+        got = jax.tree.map(lambda x: (x.shape, str(x.dtype)), cache_shapes)
+        want = jax.tree.map(lambda x: (x.shape, str(x.dtype)), predicted)
+        assert jax.tree.structure(got) == jax.tree.structure(want)
+        mism = [(a, b) for a, b in zip(jax.tree.leaves(got),
+                                       jax.tree.leaves(want)) if a != b]
+        assert not mism, mism
+
+
+class TestServeStep:
+    def test_serve_step_shapes(self):
+        cfg = TINY
+        params, _ = make_train_state(cfg)
+        caches = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            steps.cache_sds(cfg, 2, 32))
+        logits, new_caches = steps.serve_step(
+            params, caches, jnp.zeros((2,), jnp.int32), cfg=cfg)
+        assert logits.shape == (2, cfg.vocab)
+        assert new_caches["k"].shape == caches["k"].shape
+        assert int(new_caches["len"][0]) == 1
+
+
+class TestTrainLoopFT:
+    def test_restart_bit_exact(self, tmp_path):
+        """Interrupted + resumed training must equal uninterrupted training
+        (checkpoint + stateless data pipeline => bit-exact restart)."""
+        dcfg = DataConfig(global_batch=4, seq_len=16, vocab=128, seed=9)
+        ocfg = adamw.OptConfig(peak_lr=1e-3, warmup_steps=2)
+
+        t_all = TrainConfig(total_steps=8, ckpt_every=100, log_every=100,
+                            ckpt_dir=str(tmp_path / "a"), async_ckpt=False)
+        run_a = train(TINY, dcfg, t_all, ocfg)
+
+        t_half = dataclasses.replace(t_all, total_steps=4, ckpt_every=4,
+                                     ckpt_dir=str(tmp_path / "b"))
+        train(TINY, dcfg, t_half, ocfg)
+        t_resume = dataclasses.replace(t_half, total_steps=8)
+        run_b = train(TINY, dcfg, t_resume, ocfg)   # resumes from step 4
+
+        np.testing.assert_allclose(run_a["final_loss"], run_b["final_loss"],
+                                   rtol=1e-6)
+        for a, b in zip(jax.tree.leaves(run_a["params"]),
+                        jax.tree.leaves(run_b["params"])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_loss_goes_down(self, tmp_path):
+        dcfg = DataConfig(global_batch=4, seq_len=32, vocab=128)
+        tcfg = TrainConfig(total_steps=30, ckpt_every=100, log_every=100,
+                           ckpt_dir=str(tmp_path / "c"), async_ckpt=False)
+        res = train(TINY, dcfg, tcfg,
+                    adamw.OptConfig(peak_lr=3e-3, warmup_steps=5))
+        assert res["history"][-1]["loss"] < res["history"][0]["loss"]
