@@ -1,0 +1,17 @@
+"""Repo-wide test bootstrap.
+
+This container has no network access, so optional test-only dependencies may
+be absent.  When the real ``hypothesis`` package is unavailable we fall back
+to the vendored deterministic stub in ``tests/_stubs`` (same API surface the
+tests use, uniform numpy sampling, no shrinking).  With hypothesis installed
+the stub is inert.
+"""
+
+import os
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "tests",
+                                    "_stubs"))

@@ -65,6 +65,9 @@ def anneal(x0: Schedule,
            cooling: float = 1.05,          # the paper's L:  T <- T * L^-1
            seed: int = 0,
            on_step: Callable[[AnnealStep], None] | None = None) -> AnnealResult:
+    if cooling <= 1.0:
+        raise ValueError(f"cooling must be > 1 (T <- T/L each step), "
+                         f"got {cooling}: the loop would never terminate")
     rng = np.random.default_rng(seed)
     t0_raw = energy(x0)
     if not math.isfinite(t0_raw) or t0_raw <= 0:

@@ -19,6 +19,7 @@ import json
 import os
 import tempfile
 import threading
+import warnings
 from typing import Any
 
 from repro.core.schedule import Schedule
@@ -47,8 +48,26 @@ class ScheduleCache:
         self._lock = threading.Lock()
         self._data: dict[str, list[dict]] = {}
         if path and os.path.exists(path):
-            with open(path) as f:
-                self._data = json.load(f)
+            try:
+                with open(path) as f:
+                    loaded = json.load(f)
+                if not isinstance(loaded, dict):
+                    raise ValueError(f"expected a JSON object, got "
+                                     f"{type(loaded).__name__}")
+                for key, entries in loaded.items():
+                    if not isinstance(entries, list):
+                        raise ValueError(f"entry list for {key!r} is "
+                                         f"{type(entries).__name__}")
+                    for d in entries:
+                        CacheEntry.from_dict(d)   # raises on malformed entry
+                self._data = loaded
+            except (json.JSONDecodeError, ValueError, TypeError,
+                    OSError) as e:
+                # a truncated/corrupt store must not take tuning down with
+                # it — degrade to empty (the next flush rewrites the file)
+                warnings.warn(f"ScheduleCache: ignoring unreadable cache "
+                              f"file {path!r} ({e}); starting empty",
+                              RuntimeWarning, stacklevel=2)
 
     @staticmethod
     def key(kernel_name: str, signature: str) -> str:

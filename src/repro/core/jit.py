@@ -41,6 +41,21 @@ class TuneConfig:
     final_samples: int = 64       # tests on the final best before caching
     rtol: float = 2e-2
     atol: float = 2e-2
+    guided: bool = False          # beyond-paper cost-model-guided proposals
+    greed: float = 0.5            # P(greedy action) when guided
+
+
+def _make_policy(config: TuneConfig, space: SearchSpace,
+                 program_for: Callable[[Schedule], Program]) -> MutationPolicy:
+    """The proposal policy a tune run uses — guided when config.guided."""
+    if config.guided:
+        # lazy import: core.guided imports the repro.core package
+        from repro.core.guided import GuidedMutationPolicy
+        return GuidedMutationPolicy(space=space, program_for=program_for,
+                                    knob_prob=config.knob_prob,
+                                    greed=config.greed)
+    return MutationPolicy(space=space, program_for=program_for,
+                          knob_prob=config.knob_prob)
 
 
 class SipKernel:
@@ -124,8 +139,7 @@ class SipKernel:
         else:
             raise ValueError(config.energy)
         guarded = energy_mod.GuardedEnergy(base, step_test)
-        policy = MutationPolicy(space=space, program_for=program_for,
-                                knob_prob=config.knob_prob)
+        policy = _make_policy(config, space, program_for)
         x0 = self.default_schedule(static)
 
         results = []

@@ -1,0 +1,78 @@
+"""Compressed collectives: per-block symmetric int8 quantization.
+
+Gradient all-reduce is the bandwidth-dominant collective of data-parallel
+training (see benchmarks/roofline.py); quantizing the payload to int8 cuts
+every hop's bytes 4x at a bounded, test-asserted accuracy cost.
+
+Scheme: flatten, pad to a multiple of ``block``, one float32 scale per block
+(symmetric, scale = max|block| / 127) so the round-trip error of every
+element is at most scale/2 = max|block|/254.  Zero blocks quantize to exact
+zeros.  ``compressed_psum`` is the shard_map-level reduction built on it:
+all-gather the int8 payload + scales, dequantize, and sum locally — the
+result is value-replicated like a psum.
+
+Traffic honesty: the all-gather formulation moves ~(N-1)·|x| int8 bytes per
+device on an N-way axis, vs ~8·|x| bytes for a ring fp32 all-reduce — it
+only wins for small axes (N <= 8, e.g. a pod axis or a node-local replica
+group), which is exactly where it is deployed and tested here.  Larger axes
+need a quantized reduce-scatter (requantizing partial sums), which this
+module does not implement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+QMAX = 127.0
+
+
+def quantize_int8(x: jax.Array, block: int = 64):
+    """x (any shape) -> (q int8 (nblocks, block), scales f32 (nblocks,), pad).
+
+    ``pad`` is the (static) number of zero elements appended so the flat size
+    divides ``block``; callers thread it to :func:`dequantize_int8`.
+    """
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    blocks = flat.reshape(-1, block).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(blocks), axis=1)
+    scales = jnp.where(amax > 0, amax, 1.0) / QMAX
+    q = jnp.clip(jnp.round(blocks / scales[:, None]), -QMAX, QMAX)
+    return q.astype(jnp.int8), scales.astype(jnp.float32), pad
+
+
+def dequantize_int8(q: jax.Array, scales: jax.Array, pad: int,
+                    shape, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_int8` (up to the per-block error bound)."""
+    flat = (q.astype(jnp.float32) * scales[:, None]).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, block: int = 64) -> jax.Array:
+    """Sum ``x`` over the mapped mesh axis with int8-compressed traffic.
+
+    For use inside ``shard_map``: each shard quantizes its local value, the
+    int8 payload and scales are all-gathered over ``axis_name``, and every
+    shard dequantizes and sums — the result is replicated (like psum) with
+    each hop carrying 1/4 of the fp32 bytes.  Only beneficial on small axes
+    (see the module docstring's traffic accounting).
+    """
+    q, scales, pad = quantize_int8(x, block)
+    qg = jax.lax.all_gather(q, axis_name)            # (N, nblocks, block) int8
+    sg = jax.lax.all_gather(scales, axis_name)       # (N, nblocks)
+    total = jnp.sum(qg.astype(jnp.float32) * sg[..., None], axis=0).reshape(-1)
+    if pad:
+        total = total[:-pad]
+    return total.reshape(x.shape).astype(x.dtype)
+
+
+def compression_ratio(x: jax.Array, block: int = 64) -> float:
+    """Wire-bytes ratio of the compressed representation vs fp32."""
+    n = x.size
+    nblocks = -(-n // block)
+    return (nblocks * block * 1 + nblocks * 4) / (n * 4)

@@ -1,0 +1,159 @@
+"""Logical-axis sharding (MaxText-style partition rules).
+
+Model code names the *logical* meaning of every tensor dimension ("batch",
+"embed", "mlp", ...); this module resolves those names to *mesh* axes
+("pod", "data", "model") under a rule table.  Resolution enforces two
+invariants GSPMD requires:
+
+* a mesh axis is used at most once within one PartitionSpec (no-reuse);
+* a dimension is only sharded if its size divides the product of the mesh
+  axes assigned to it — otherwise axes are dropped innermost-first until it
+  does (divisibility fallback), degenerating to replication.
+
+``shard`` is the in-model constraint primitive: a no-op without an active
+mesh (single-device tests), ``with_sharding_constraint`` under
+``mesh_rules``.  The rules are data, not code — sequence parallelism, for
+example, is just ``rules["seq"] = "model"`` (see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import math
+from typing import Any, Iterator, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+# Logical axis -> mesh axis (or tuple of mesh axes, outermost first).
+# ``None`` documents an axis that deliberately stays replicated/unsharded.
+DEFAULT_RULES: dict[str, Any] = {
+    # data-parallel axes
+    "batch": ("pod", "data"),          # global batch over pod x data
+    # fully-sharded (ZeRO/FSDP-style) parameter embed dim
+    "embed": "data",
+    # tensor/expert-parallel axes
+    "vocab": "model",
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "ssm_heads": "model",
+    "ssm_inner": "model",
+    "conv_ch": "model",
+    # sequence parallelism: activations' seq dim when cfg.seq_shard is on
+    "act_seq": "model",
+    # replicated-by-default axes
+    "seq": None,                       # input token dim (SP overrides to model)
+    "kv_seq": None,                    # decode-cache length
+    "head_dim": None,
+    "ssm_state": None,
+    "layers": None,                    # lax.scan stacking dim
+    "embed_act": None,                 # activations' embed dim (residual)
+}
+
+# --------------------------------------------------------------- active mesh
+# contextvar (not a module global): concurrent mesh_rules scopes in different
+# threads/tasks must not see each other's mesh
+_ACTIVE: contextvars.ContextVar[tuple[tuple[Any, dict[str, Any]], ...]] = \
+    contextvars.ContextVar("repro_dist_mesh_rules", default=())
+
+
+@contextlib.contextmanager
+def mesh_rules(mesh, rules: dict[str, Any] | None = None) -> Iterator[Any]:
+    """Activate ``mesh`` (+ optional rule overrides) for a region of code.
+
+    ``rules`` entries are merged over :data:`DEFAULT_RULES` (override an axis
+    with ``None`` to force replication).  ``shard`` calls trace to
+    ``with_sharding_constraint`` while a mesh is active and to the identity
+    otherwise.  Reentrant; innermost wins.
+    """
+    entry = (mesh, {**DEFAULT_RULES, **(rules or {})})
+    token = _ACTIVE.set(_ACTIVE.get() + (entry,))
+    try:
+        yield mesh
+    finally:
+        _ACTIVE.reset(token)
+
+
+def active_mesh_rules() -> tuple[Any, dict[str, Any] | None]:
+    """(mesh, rules) of the innermost ``mesh_rules`` scope, or (None, None)."""
+    stack = _ACTIVE.get()
+    return stack[-1] if stack else (None, None)
+
+
+# ---------------------------------------------------------------- resolution
+def resolve_spec(axes: Sequence[str | None], mesh,
+                 shape: Sequence[int] | None = None,
+                 rules: dict[str, Any] | None = None) -> PartitionSpec:
+    """Logical axes -> PartitionSpec for ``mesh``.
+
+    Mesh axes absent from ``mesh`` are dropped (e.g. "pod" on a single-pod
+    mesh); a mesh axis already consumed by an earlier dimension of this spec
+    is skipped; with ``shape``, assigned axes are dropped innermost-first
+    until the dimension size divides their product.
+    """
+    rules = DEFAULT_RULES if rules is None else rules
+    sizes = dict(mesh.shape)
+    used: set[str] = set()
+    entries: list[Any] = []
+    for i, logical in enumerate(axes):
+        target = rules.get(logical) if logical is not None else None
+        if target is None:
+            entries.append(None)
+            continue
+        cand = (target,) if isinstance(target, str) else tuple(target)
+        chosen = [a for a in cand if a in sizes and a not in used]
+        if shape is not None:
+            while chosen and shape[i] % math.prod(sizes[a] for a in chosen):
+                chosen.pop()
+        if not chosen:
+            entries.append(None)
+            continue
+        used.update(chosen)
+        entries.append(chosen[0] if len(chosen) == 1 else tuple(chosen))
+    return PartitionSpec(*entries)
+
+
+def named_sharding(axes: Sequence[str | None], mesh,
+                   shape: Sequence[int] | None = None,
+                   rules: dict[str, Any] | None = None) -> NamedSharding:
+    """NamedSharding for one tensor's logical axes on ``mesh``."""
+    return NamedSharding(mesh, resolve_spec(axes, mesh, shape=shape,
+                                            rules=rules))
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def tree_shardings(axes_tree: Any, mesh, *, sds_tree: Any = None,
+                   rules: dict[str, Any] | None = None) -> Any:
+    """Tree of logical-axes tuples -> matching tree of NamedShardings.
+
+    ``sds_tree`` (same structure, ShapeDtypeStruct/array leaves) enables the
+    divisibility fallback per leaf.
+    """
+    if sds_tree is None:
+        return jax.tree.map(
+            lambda ax: named_sharding(ax, mesh, rules=rules),
+            axes_tree, is_leaf=_is_axes_leaf)
+    return jax.tree.map(
+        lambda ax, sds: named_sharding(ax, mesh, shape=sds.shape, rules=rules),
+        axes_tree, sds_tree, is_leaf=_is_axes_leaf)
+
+
+# ---------------------------------------------------------------- constraint
+def shard(x, *axes: str | None):
+    """Constrain activation ``x`` to its logical axes' sharding.
+
+    Identity (returns ``x`` itself) when no mesh is active, so model code is
+    unconditional and single-device paths pay nothing.
+    """
+    mesh, rules = active_mesh_rules()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, named_sharding(axes, mesh, shape=x.shape, rules=rules))

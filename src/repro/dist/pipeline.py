@@ -1,0 +1,80 @@
+"""GPipe-style pipeline parallelism over one mesh axis.
+
+``pipeline_apply`` runs S identical stages (stacked params, leading dim S)
+over M microbatches on the mesh axis ``axis``: every step each device applies
+its stage to the activation it holds, then rotates activations one stage
+forward with ``ppermute``.  Stage 0 injects microbatch t at step t; stage S-1
+emits microbatch t-(S-1) at step t; the fill/drain steps where a stage holds
+no live microbatch are the schedule's bubble, ``bubble_fraction`` =
+(S-1)/(M+S-1) of the S*(M+S-1) device-steps.
+
+The whole schedule is a ``lax.scan`` of M+S-1 steps inside one ``shard_map``,
+so it is differentiable end-to-end (ppermute transposes to the reverse
+rotation) — the grad-parity test in tests/pipeline_subprocess.py relies on
+exactly that.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import shard_map
+
+
+def bubble_fraction(stages: int, microbatches: int) -> float:
+    """Idle fraction of the GPipe schedule: (S-1)/(M+S-1)."""
+    if stages <= 1:
+        return 0.0
+    return (stages - 1) / (microbatches + stages - 1)
+
+
+def pipeline_apply(stage_fn: Callable[[Any, jax.Array], jax.Array],
+                   stage_params: Any, x: jax.Array, *, mesh, axis: str,
+                   n_micro: int) -> jax.Array:
+    """Apply S stacked stages to ``x`` (batch-leading), pipelined over ``axis``.
+
+    ``stage_params``: pytree whose leaves have leading dim S = mesh.shape[axis]
+    (one slice per stage).  ``stage_fn(params_slice, h) -> h`` must preserve
+    the activation shape.  ``x.shape[0]`` must divide into ``n_micro``
+    microbatches.  Mesh axes other than ``axis`` replicate.
+    """
+    n_stages = mesh.shape[axis]
+    batch = x.shape[0]
+    if batch % n_micro:
+        raise ValueError(f"batch {batch} not divisible by n_micro {n_micro}")
+    x_micro = x.reshape((n_micro, batch // n_micro) + x.shape[1:])
+    n_steps = n_micro + n_stages - 1
+
+    def run(p_stages, xm):
+        p_local = jax.tree.map(lambda a: a[0], p_stages)   # this stage's slice
+        idx = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def step(carry, t):
+            state, out = carry
+            x_t = jax.lax.dynamic_index_in_dim(
+                xm, jnp.clip(t, 0, n_micro - 1), 0, keepdims=False)
+            x_t = jnp.where(t < n_micro, x_t, jnp.zeros_like(x_t))
+            h = jnp.where(idx == 0, x_t, state)    # stage 0 injects; rest relay
+            y = stage_fn(p_local, h)
+            m = t - (n_stages - 1)                 # microbatch finishing now
+            written = jax.lax.dynamic_update_index_in_dim(
+                out, y, jnp.clip(m, 0, n_micro - 1), 0)
+            out = jnp.where((idx == n_stages - 1) & (m >= 0), written, out)
+            return (jax.lax.ppermute(y, axis, perm), out), None
+
+        out0 = jnp.zeros(xm.shape, xm.dtype)
+        state0 = jnp.zeros(xm.shape[1:], xm.dtype)
+        (_, out), _ = jax.lax.scan(step, (state0, out0), jnp.arange(n_steps))
+        # only the last stage holds real outputs; psum replicates them (the
+        # other stages contribute zeros) so out_specs can be unsharded
+        return jax.lax.psum(
+            jnp.where(idx == n_stages - 1, out, jnp.zeros_like(out)), axis)
+
+    y = shard_map(run, mesh, in_specs=(P(axis), P()), out_specs=P(),
+                  check_vma=False)(stage_params, x_micro)
+    return y.reshape((batch,) + y.shape[2:])

@@ -150,7 +150,7 @@ BATCH_AXES = {"tokens": ("batch", "seq"), "labels": ("batch", "seq"),
 
 
 def batch_shardings(batch_tree, mesh):
-    return jax.tree.map_with_path(
+    return jax.tree_util.tree_map_with_path(
         lambda path, sds: partition.named_sharding(
             BATCH_AXES[path[0].key], mesh, shape=sds.shape),
         batch_tree)

@@ -70,12 +70,15 @@ def main() -> None:
     ap.add_argument("--final-samples", type=int, default=64)
     ap.add_argument("--guided", action="store_true",
                     help="use the beyond-paper guided mutation policy")
+    ap.add_argument("--greed", type=float, default=0.5,
+                    help="P(greedy proposal) when --guided (default 0.5)")
     args = ap.parse_args()
 
     cache = ScheduleCache(args.cache)
     cfg = TuneConfig(rounds=args.rounds, cooling=args.cooling,
                      final_samples=args.final_samples,
-                     step_samples=1)
+                     step_samples=1,
+                     guided=args.guided, greed=args.greed)
     rng = np.random.default_rng(0)
     for name in (args.kernel or list(KERNELS)):
         print(f"[tune] {name}")

@@ -1,0 +1,94 @@
+"""Minimal, deterministic stand-in for the real ``hypothesis`` package.
+
+Activated by the repo-root ``conftest.py`` ONLY when hypothesis is not
+installed (this container has no network access).  It implements just the
+surface our property tests use — ``given``/``settings``, scalar strategies,
+``st.composite``, and ``hypothesis.extra.numpy`` arrays — with numpy-backed
+uniform sampling seeded from the test's qualified name, so runs are
+repeatable.  It does no shrinking and no edge-case database; with the real
+package on the path this module is never imported.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+
+class SearchStrategy:
+    """Base: ``example(rng)`` draws one value."""
+
+    def example(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+    def example_array(self, rng: np.random.Generator, shape, dtype):
+        """Vectorized fallback used by ``extra.numpy.arrays``."""
+        n = int(np.prod(shape)) if shape else 1
+        flat = np.asarray([self.example(rng) for _ in range(n)], dtype=dtype)
+        return flat.reshape(shape)
+
+    def map(self, f):
+        return _Mapped(self, f)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, inner, f):
+        self.inner, self.f = inner, f
+
+    def example(self, rng):
+        return self.f(self.inner.example(rng))
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: SearchStrategy):
+    """Run the test once per example with values drawn from ``strategies``.
+
+    Supports the positional style used in this repo: the last
+    ``len(strategies)`` parameters of the test function are filled.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", 20))
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                vals = [s.example(rng) for s in strategies]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except _Unsatisfied:
+                    continue
+
+        # hide the strategy-filled parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())[:-len(strategies)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        del wrapper.__wrapped__
+        wrapper._stub_max_examples = getattr(fn, "_stub_max_examples", 20)
+        return wrapper
+
+    return deco
+
+
+def assume(condition: bool) -> bool:
+    if not condition:
+        raise _Unsatisfied()
+    return True
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+from hypothesis import strategies  # noqa: E402  (re-export for star users)

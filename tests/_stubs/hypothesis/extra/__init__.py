@@ -1,0 +1,1 @@
+"""hypothesis.extra namespace for the stub (see hypothesis/__init__.py)."""

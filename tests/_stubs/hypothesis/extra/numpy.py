@@ -1,0 +1,36 @@
+"""numpy array strategies for the hypothesis stub (see hypothesis/__init__.py)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from hypothesis import SearchStrategy
+
+
+class array_shapes(SearchStrategy):
+    def __init__(self, *, min_dims=1, max_dims=None, min_side=1, max_side=None):
+        self.min_dims = min_dims
+        self.max_dims = max_dims if max_dims is not None else min_dims + 2
+        self.min_side = min_side
+        self.max_side = max_side if max_side is not None else min_side + 5
+
+    def example(self, rng):
+        ndims = int(rng.integers(self.min_dims, self.max_dims + 1))
+        return tuple(int(rng.integers(self.min_side, self.max_side + 1))
+                     for _ in range(ndims))
+
+
+class arrays(SearchStrategy):
+    def __init__(self, dtype, shape, *, elements=None, fill=None,
+                 unique=False, **_ignored):
+        self.dtype = np.dtype(dtype)
+        self.shape = shape
+        self.elements = elements
+
+    def example(self, rng):
+        shape = (self.shape.example(rng)
+                 if isinstance(self.shape, SearchStrategy) else
+                 tuple(self.shape))
+        if self.elements is not None:
+            return self.elements.example_array(rng, shape, self.dtype)
+        return rng.standard_normal(shape).astype(self.dtype)

@@ -1,0 +1,107 @@
+"""Scalar/collection strategies for the hypothesis stub (see __init__.py)."""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from hypothesis import SearchStrategy
+
+
+class floats(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None, *, width=64,
+                 allow_nan=False, allow_infinity=False, **_ignored):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+        self.width = width
+
+    def example(self, rng):
+        r = rng.random()
+        if r < 0.05:
+            v = self.lo
+        elif r < 0.10:
+            v = self.hi
+        elif r < 0.15 and self.lo <= 0.0 <= self.hi:
+            v = 0.0
+        else:
+            v = rng.uniform(self.lo, self.hi)
+        if self.width == 32:
+            v = float(np.float32(v))
+        return float(v)
+
+    def example_array(self, rng, shape, dtype):
+        a = rng.uniform(self.lo, self.hi, size=shape)
+        return a.astype(dtype)
+
+
+class integers(SearchStrategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 31) if min_value is None else int(min_value)
+        self.hi = 2 ** 31 - 1 if max_value is None else int(max_value)
+
+    def example(self, rng):
+        return int(rng.integers(self.lo, self.hi + 1))
+
+    def example_array(self, rng, shape, dtype):
+        return rng.integers(self.lo, self.hi + 1, size=shape).astype(dtype)
+
+
+class lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, *, min_size=0, max_size=10,
+                 **_ignored):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng):
+        n = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elements.example(rng) for _ in range(n)]
+
+
+class sampled_from(SearchStrategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return self.elements[int(rng.integers(len(self.elements)))]
+
+
+class booleans(SearchStrategy):
+    def example(self, rng):
+        return bool(rng.integers(2))
+
+
+class just(SearchStrategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+
+class tuples(SearchStrategy):
+    def __init__(self, *strategies):
+        self.strategies = strategies
+
+    def example(self, rng):
+        return tuple(s.example(rng) for s in self.strategies)
+
+
+class _Composite(SearchStrategy):
+    def __init__(self, fn, args, kwargs):
+        self.fn, self.args, self.kwargs = fn, args, kwargs
+
+    def example(self, rng):
+        draw = lambda strat: strat.example(rng)
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn):
+    """``@st.composite`` — the decorated fn's first arg becomes ``draw``."""
+
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        return _Composite(fn, args, kwargs)
+
+    return builder

@@ -64,17 +64,18 @@ def train_parity():
 def compressed_psum_test():
     from jax.sharding import PartitionSpec as P
     from repro.dist import collectives
+    from repro.dist.compat import shard_map
 
     mesh = jax.make_mesh((8,), ("pod",))
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.standard_normal((8, 64, 32)), jnp.float32)
 
-    exact = jax.shard_map(
+    exact = shard_map(
         lambda v: jax.lax.psum(v[0], "pod"), mesh=mesh,
         in_specs=P("pod", None, None), out_specs=P(None, None))(x)
     # check_vma=False: the compressed reduction is value-replicated (sum of
     # all-gathered blocks) but shard_map cannot prove it
-    comp = jax.shard_map(
+    comp = shard_map(
         lambda v: collectives.compressed_psum(v[0], "pod"), mesh=mesh,
         in_specs=P("pod", None, None), out_specs=P(None, None),
         check_vma=False)(x)

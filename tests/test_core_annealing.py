@@ -109,6 +109,32 @@ class TestAnnealing:
         assert reward(2.0, 1.0, 4.0) == pytest.approx(0.25)
         assert reward(1.0, float("inf"), 4.0) == 0.0   # failed test => 0
 
+    def test_non_cooling_schedule_rejected(self):
+        """cooling <= 1 would never cross t_min — must raise, not hang."""
+        _, policy, energy = self._setup(2)
+        with pytest.raises(ValueError, match="cooling"):
+            anneal(Schedule(), energy, policy.propose, cooling=1.0)
+
+    def test_perturb_with_no_legal_actions_terminates(self):
+        """perturb == None on every step (no legal move anywhere) must still
+        cool to t_min and return the initial schedule, not spin forever."""
+        p = make_latency_program(2)
+        energy = CostModelEnergy(program_for=lambda s: p)
+        calls = {"n": 0}
+
+        def dead_perturb(s, rng):
+            calls["n"] += 1
+            return None
+
+        res = anneal(Schedule(), energy, dead_perturb,
+                     t_max=1.0, t_min=1e-2, cooling=1.1, seed=0)
+        assert res.best == Schedule()
+        assert res.best_raw == res.initial_raw
+        assert res.improvement == 0.0
+        assert res.evals == 1                  # only the initial energy
+        assert res.history == []               # no candidates ever evaluated
+        assert calls["n"] > 0                  # ...but the loop did run
+
 
 class TestMutationPolicy:
     def test_knob_mutation_beyond_paper(self):
@@ -178,6 +204,51 @@ class TestScheduleCache:
 
     def test_missing_entry(self):
         assert ScheduleCache().best("nope", "sig") is None
+
+    @pytest.mark.parametrize("payload", [
+        "", "{not json", '["a", "list"]',
+        '{"k::sig": {"not": "a list"}}',            # mistyped entry list
+        '{"k::sig": [{"bogus_field": 1}]}',         # malformed entry dict
+    ])
+    def test_corrupt_cache_file_degrades_to_empty(self, tmp_path, payload):
+        """Regression: a corrupt/empty/mistyped store must warn, start empty,
+        and still accept + persist new entries (not crash json.load)."""
+        path = str(tmp_path / "cache.json")
+        with open(path, "w") as f:
+            f.write(payload)
+        with pytest.warns(RuntimeWarning, match="ignoring unreadable"):
+            cache = ScheduleCache(path)
+        assert cache.best("k", "sig") is None
+        cache.put("k", "sig", Schedule(knobs={"bm": 8}), energy=1.0,
+                  tests_passed=True)
+        assert ScheduleCache(path).best("k", "sig").knobs["bm"] == 8
+
+    def test_concurrent_put_atomic_flush(self, tmp_path):
+        """N threads hammering put() must lose no entries, and the on-disk
+        file must be valid JSON at the end (atomic tmp+replace flushes)."""
+        import threading
+
+        path = str(tmp_path / "cache.json")
+        cache = ScheduleCache(path)
+        n_threads, per_thread = 8, 10
+
+        def work(tid):
+            for i in range(per_thread):
+                cache.put("k", f"sig{tid}", Schedule(knobs={"bm": i}),
+                          energy=float(i + 1), tests_passed=True,
+                          round_id=i)
+
+        threads = [threading.Thread(target=work, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        reloaded = ScheduleCache(path)
+        for t in range(n_threads):
+            entries = reloaded.entries("k", f"sig{t}")
+            assert len(entries) == per_thread
+            assert reloaded.best("k", f"sig{t}").knobs["bm"] == 0
 
 
 class TestSchedule:

@@ -1,9 +1,13 @@
-"""Guided (beyond-paper) mutation policy tests."""
+"""Guided (beyond-paper) mutation policy tests + --guided CLI wiring."""
+
+import sys
 
 import numpy as np
 
-from repro.core import CostModelEnergy, Schedule, SearchSpace, anneal
+from repro.core import (CostModelEnergy, Schedule, ScheduleCache, SearchSpace,
+                        SipKernel, TuneConfig, anneal)
 from repro.core.guided import GuidedMutationPolicy
+from repro.core.jit import _make_policy
 from repro.core.mutation import MutationPolicy
 
 from tests.test_core_annealing import make_latency_program
@@ -61,3 +65,58 @@ class TestGuidedPolicy:
                 break
             assert a.order == b.order
             s = a
+
+
+class TestGuidedFlagWiring:
+    """The --guided flag must actually change the search policy (it used to
+    be parsed and dropped on the floor)."""
+
+    def _program_for(self):
+        p = make_latency_program(4)
+        return lambda s, **static: p
+
+    def test_make_policy_dispatch(self):
+        pf = self._program_for()
+        guided = _make_policy(TuneConfig(guided=True, greed=0.7),
+                              SearchSpace(), lambda s: pf(s))
+        vanilla = _make_policy(TuneConfig(guided=False),
+                               SearchSpace(), lambda s: pf(s))
+        assert isinstance(guided, GuidedMutationPolicy)
+        assert guided.greed == 0.7
+        assert type(vanilla) is MutationPolicy
+
+    def _fake_kernel(self, cache):
+        pf = self._program_for()
+        oracle = lambda x: np.asarray(x) * 2.0
+        return SipKernel(name="fake",
+                         build=lambda schedule, **static: oracle,
+                         program_for=pf,
+                         space_for=lambda **static: SearchSpace(),
+                         oracle=oracle,
+                         signature_fn=lambda x: {"n": int(x.shape[0])},
+                         cache=cache)
+
+    def test_guided_tune_runs_and_caches(self, tmp_path):
+        cache = ScheduleCache(str(tmp_path / "c.json"))
+        kern = self._fake_kernel(cache)
+        cfg = TuneConfig(rounds=1, cooling=1.2, step_samples=0,
+                         final_samples=1, guided=True, greed=1.0)
+        res = kern.tune([np.ones(8, np.float32)], cfg)
+        assert len(res) == 1
+        assert res[0].improvement > 0       # greedy steps find the overlap
+        sig = kern.sig_str({"n": 8})
+        assert cache.best("fake", sig) is not None
+
+    def test_cli_guided_flag_reaches_tune_config(self, monkeypatch, tmp_path):
+        from repro.launch import tune
+        seen = {}
+        monkeypatch.setattr(
+            tune, "KERNELS",
+            {"fake": lambda cache, cfg, rng: seen.__setitem__("cfg", cfg)})
+        base = ["tune", "--cache", str(tmp_path / "c.json"), "--kernel", "fake"]
+        monkeypatch.setattr(sys, "argv", base + ["--guided", "--greed", "0.9"])
+        tune.main()
+        assert seen["cfg"].guided is True and seen["cfg"].greed == 0.9
+        monkeypatch.setattr(sys, "argv", base)
+        tune.main()
+        assert seen["cfg"].guided is False
