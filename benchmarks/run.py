@@ -15,12 +15,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: table2,table3,fig2,roofline,throughput")
+                    help="comma list: table2,table3,fig2,roofline,throughput,"
+                         "guided,search")
     args = ap.parse_args()
     full = not args.quick
 
     from benchmarks import (fig2_testing, guided_search, roofline,
-                            table2_attention, table3_gemm, throughput)
+                            search_throughput, table2_attention, table3_gemm,
+                            throughput)
     suites = {
         "table2": table2_attention.run,
         "table3": table3_gemm.run,
@@ -28,6 +30,7 @@ def main() -> None:
         "roofline": roofline.run,
         "throughput": throughput.run,
         "guided": guided_search.run,
+        "search": search_throughput.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     print("name,value,derived")

@@ -1,0 +1,165 @@
+"""Search throughput: sequential SIP vs population(4 chains)+memoization.
+
+The tuning hot path before this benchmark existed re-built the kernel IR on
+every proposal AND every energy evaluation, re-simulated revisited schedules,
+and ran 4 independent sequential restarts.  The batched engine shares one
+memoized ``program_for``, one :class:`~repro.core.energy.CachedEnergy`, and
+runs 4 lockstep chains on a temperature ladder with best-state exchange
+(:func:`~repro.core.population.population_anneal`).
+
+Measured per workload (gemm + attention, costmodel backend):
+
+* ``evals/sec`` — energy queries per wall-clock second (cache hits count as
+  queries: a hit answers the same question a full evaluation would) plus
+  ``real_evals_per_sec`` (hits excluded), so a rising hit rate cannot
+  masquerade as real-throughput gains across PRs;
+* cache hit rate and best normalized energy for both engines;
+* a single-chain equivalence check — ``population_anneal(chains=1)`` must
+  reproduce ``anneal()`` bit-for-bit under the same seed.
+
+``python benchmarks/search_throughput.py`` writes ``BENCH_search.json`` so
+the perf trajectory is tracked across PRs; ``--smoke`` shrinks shapes and
+budgets for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import (CachedEnergy, CostModelEnergy, MutationPolicy,
+                        Schedule, anneal, multi_round, population_anneal)
+
+CHAINS = 4
+ROUNDS = 4          # sequential baseline: the legacy multi_round restarts
+
+
+def _workloads(full: bool):
+    from repro.kernels.flash_attention import ops as attn_ops
+    from repro.kernels.gemm_fused import ops as gemm_ops
+    gemm = dict(m=256, n=256, k=1024, dtype="float32") if full else \
+        dict(m=32, n=32, k=64, dtype="float32")
+    attn = dict(b=1, hq=4, hkv=2, sq=128, skv=128, d=32, causal=True,
+                window=None, dtype="float32") if full else \
+        dict(b=1, hq=2, hkv=1, sq=32, skv=32, d=16, causal=True,
+             window=None, dtype="float32")
+    return {"gemm": (gemm_ops, gemm), "attention": (attn_ops, attn)}
+
+
+def _memoized(program_for):
+    programs = {}
+
+    def memo(s: Schedule):
+        key = s.knob_signature()
+        prog = programs.get(key)
+        if prog is None:
+            prog = programs[key] = program_for(s)
+        return prog
+
+    return memo
+
+
+def bench_workload(ops, shape: dict, *, cooling: float, t_min: float,
+                   seed: int = 0) -> dict:
+    space = ops.space(**shape)
+    x0 = Schedule(knobs=space.default_knobs())
+    plain = lambda s: ops.program_for(s, **shape)
+    kw = dict(t_max=1.0, t_min=t_min, cooling=cooling, seed=seed)
+
+    # --- sequential baseline: the pre-population tuning hot path ---------
+    policy = MutationPolicy(space=space, program_for=plain)
+    t0 = time.perf_counter()
+    seq = multi_round(x0, CostModelEnergy(plain), policy.propose,
+                      rounds=ROUNDS, **kw)
+    t_seq = time.perf_counter() - t0
+    q_seq = sum(r.evals for r in seq)
+
+    # --- population + memoization: the batched engine --------------------
+    memo_pf = _memoized(plain)
+    policy = MutationPolicy(space=space, program_for=memo_pf)
+    cached = CachedEnergy(CostModelEnergy(memo_pf))
+    t0 = time.perf_counter()
+    pop = population_anneal(x0, cached, policy.propose, chains=CHAINS,
+                            exchange_every=16, ladder=1.5, **kw)
+    t_pop = time.perf_counter() - t0
+    stats = pop.cache_stats or {"hits": 0, "misses": 1}
+
+    # --- single-chain equivalence: population(1) == anneal() -------------
+    ref = anneal(x0, CostModelEnergy(plain), policy.propose, **kw)
+    one = population_anneal(x0, CachedEnergy(CostModelEnergy(memo_pf)),
+                            policy.propose, chains=1, **kw)
+    identical = (ref.best == one.best
+                 and ref.best_energy == one.chains[0].best_energy
+                 and ref.evals == one.chains[0].evals)
+
+    seq_eps = q_seq / t_seq
+    pop_eps = pop.evals / t_pop
+    return {
+        "sequential": {"evals": q_seq, "secs": round(t_seq, 4),
+                       "evals_per_sec": round(seq_eps, 1),
+                       "best_energy": min(r.best_energy for r in seq)},
+        "population": {"evals": pop.evals, "secs": round(t_pop, 4),
+                       "evals_per_sec": round(pop_eps, 1),
+                       "real_evals_per_sec": round(stats["misses"] / t_pop, 1),
+                       "best_energy": pop.best_energy,
+                       "cache_hits": stats["hits"],
+                       "cache_misses": stats["misses"],
+                       "hit_rate": round(stats["hits"]
+                                         / max(1, stats["hits"] + stats["misses"]), 4),
+                       "exchanges": pop.exchanges},
+        "speedup_evals_per_sec": round(pop_eps / seq_eps, 2),
+        "speedup_real_evals_per_sec": round((stats["misses"] / t_pop)
+                                            / seq_eps, 2),
+        "single_chain_identical": bool(identical),
+    }
+
+
+def bench(full: bool = True) -> dict:
+    cooling, t_min = (1.02, 1e-3) if full else (1.2, 0.05)
+    out = {"config": {"chains": CHAINS, "rounds": ROUNDS, "cooling": cooling,
+                      "t_min": t_min, "exchange_every": 16, "ladder": 1.5,
+                      "mode": "full" if full else "smoke"},
+           "workloads": {}}
+    for name, (ops, shape) in _workloads(full).items():
+        out["workloads"][name] = bench_workload(ops, shape,
+                                                cooling=cooling, t_min=t_min)
+    return out
+
+
+def run(full: bool = True):
+    """benchmarks.run harness entry — CSV rows."""
+    res = bench(full)
+    rows = []
+    for name, w in res["workloads"].items():
+        rows.append((f"search/{name}_speedup_evals_per_sec",
+                     w["speedup_evals_per_sec"],
+                     f"seq={w['sequential']['evals_per_sec']}/s "
+                     f"pop={w['population']['evals_per_sec']}/s "
+                     f"real_speedup={w['speedup_real_evals_per_sec']}x "
+                     f"hit_rate={w['population']['hit_rate']:.0%} "
+                     f"single_chain_identical={w['single_chain_identical']}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + short anneal budgets (CI)")
+    ap.add_argument("--out", default="BENCH_search.json")
+    args = ap.parse_args()
+    res = bench(full=not args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1, sort_keys=True)
+        f.write("\n")
+    for name, w in res["workloads"].items():
+        print(f"{name}: {w['speedup_evals_per_sec']}x evals/sec "
+              f"(seq {w['sequential']['evals_per_sec']}/s -> "
+              f"pop {w['population']['evals_per_sec']}/s), "
+              f"hit_rate={w['population']['hit_rate']:.0%}, "
+              f"single_chain_identical={w['single_chain_identical']}")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

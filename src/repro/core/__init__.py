@@ -4,27 +4,31 @@ Public API:
     ir.Program / ir.Instr / ir.Kind      — the mutable schedule artifact
     schedule.Schedule / SearchSpace      — candidate representation
     mutation.MutationPolicy              — §3.2 mutation policy
-    energy.{CostModelEnergy,WallClockEnergy,GuardedEnergy,reward}
+    energy.{CostModelEnergy,WallClockEnergy,GuardedEnergy,CachedEnergy,reward}
     annealing.anneal / multi_round       — Algorithm 1
-    testing.probabilistic_test           — §4.2
-    cache.ScheduleCache                  — §4.1 offline store + greedy rank
+    population.population_anneal         — K lockstep chains + best-state exchange
+    testing.probabilistic_test           — §4.2 (vectorized batches)
+    cache.ScheduleCache / LRUCache       — §4.1 offline store + build LRU
     jit.sip_jit / SipKernel / TuneConfig — one-line integration
     costmodel                            — TPU v5e constants + simulator
 """
 
-from repro.core.annealing import AnnealResult, AnnealStep, anneal, multi_round
-from repro.core.cache import CacheEntry, ScheduleCache
-from repro.core.energy import CostModelEnergy, GuardedEnergy, WallClockEnergy, reward
+from repro.core.annealing import AnnealResult, AnnealStep, Chain, anneal, multi_round
+from repro.core.cache import CacheEntry, LRUCache, ScheduleCache
+from repro.core.energy import (CachedEnergy, CostModelEnergy, GuardedEnergy,
+                               WallClockEnergy, reward)
 from repro.core.ir import Instr, Kind, Program
 from repro.core.jit import SipKernel, TuneConfig, sip_jit
 from repro.core.mutation import MutationPolicy
+from repro.core.population import PopulationResult, population_anneal
 from repro.core.schedule import KnobSpec, Schedule, SearchSpace
 from repro.core.testing import FaultInjector, InputSpec, TestReport, probabilistic_test
 
 __all__ = [
-    "AnnealResult", "AnnealStep", "anneal", "multi_round",
-    "CacheEntry", "ScheduleCache",
-    "CostModelEnergy", "GuardedEnergy", "WallClockEnergy", "reward",
+    "AnnealResult", "AnnealStep", "Chain", "anneal", "multi_round",
+    "PopulationResult", "population_anneal",
+    "CacheEntry", "LRUCache", "ScheduleCache",
+    "CachedEnergy", "CostModelEnergy", "GuardedEnergy", "WallClockEnergy", "reward",
     "Instr", "Kind", "Program",
     "SipKernel", "TuneConfig", "sip_jit",
     "MutationPolicy",

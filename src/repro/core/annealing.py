@@ -47,6 +47,7 @@ class AnnealResult:
     initial_raw: float     # T_0, seconds
     history: list[AnnealStep]
     evals: int
+    cache_stats: dict[str, int] | None = None   # CachedEnergy hit/miss, if used
 
     @property
     def improvement(self) -> float:
@@ -54,6 +55,90 @@ class AnnealResult:
         if not math.isfinite(self.best_raw) or self.initial_raw == 0:
             return 0.0
         return (self.initial_raw - self.best_raw) / self.initial_raw
+
+
+class Chain:
+    """One Alg.-1 chain, advanced one perturb/accept step at a time.
+
+    :func:`anneal` drives a single chain to completion; population search
+    (:mod:`repro.core.population`) drives K of them in lockstep on a
+    temperature ladder.  The step logic lives here and only here, so a
+    single chain behaves bit-identically however it is driven.
+    """
+
+    def __init__(self, x0: Schedule,
+                 energy: Callable[[Schedule], float],
+                 perturb: Callable[[Schedule, np.random.Generator], Schedule | None],
+                 *, t_max: float, t_min: float, cooling: float, seed: int,
+                 on_step: Callable[[AnnealStep], None] | None = None):
+        if cooling <= 1.0:
+            raise ValueError(f"cooling must be > 1 (T <- T/L each step), "
+                             f"got {cooling}: the loop would never terminate")
+        self.energy = energy
+        self.perturb = perturb
+        self.t_min = t_min
+        self.cooling = cooling
+        self.on_step = on_step
+        self.rng = np.random.default_rng(seed)
+        t0_raw = energy(x0)
+        if not math.isfinite(t0_raw) or t0_raw <= 0:
+            raise ValueError("initial schedule must be runnable "
+                             "(finite positive energy)")
+        self.t0_raw = t0_raw
+        self.x, self.e_x = x0, 1.0
+        self.x_best, self.e_best, self.raw_best = x0, 1.0, t0_raw
+        self.history: list[AnnealStep] = []
+        self.evals = 1
+        self.T = t_max
+        self.step = 0
+
+    @property
+    def done(self) -> bool:
+        return self.T <= self.t_min
+
+    def _norm(self, e_raw: float) -> float:
+        return e_raw / self.t0_raw if math.isfinite(e_raw) else float("inf")
+
+    def adopt(self, x: Schedule, e_x: float) -> None:
+        """Replace the current state (population exchange); best is untouched."""
+        self.x, self.e_x = x, e_x
+
+    def advance(self) -> AnnealStep | None:
+        """One while-loop iteration of Alg. 1: propose, accept/reject, cool.
+
+        Returns the recorded step, or None when no legal action existed."""
+        cand = self.perturb(self.x, self.rng)
+        if cand is None:                   # no legal action from x
+            self.T /= self.cooling
+            self.step += 1
+            return None
+        e_raw = self.energy(cand)
+        self.evals += 1
+        e_c = self._norm(e_raw)
+        dE = e_c - self.e_x
+        accepted = False
+        if dE < 0:
+            self.x, self.e_x = cand, e_c
+            accepted = True
+            if e_c < self.e_best:
+                self.x_best, self.e_best, self.raw_best = cand, e_c, e_raw
+        elif math.isfinite(dE) and self.rng.random() < math.exp(-dE / self.T):
+            self.x, self.e_x = cand, e_c
+            accepted = True
+        rec = AnnealStep(step=self.step, temperature=self.T, energy=e_c,
+                         reward=-dE if math.isfinite(dE) else 0.0,
+                         accepted=accepted, best_energy=self.e_best)
+        self.history.append(rec)
+        if self.on_step is not None:
+            self.on_step(rec)
+        self.T /= self.cooling
+        self.step += 1
+        return rec
+
+    def result(self) -> AnnealResult:
+        return AnnealResult(best=self.x_best, best_energy=self.e_best,
+                            best_raw=self.raw_best, initial_raw=self.t0_raw,
+                            history=self.history, evals=self.evals)
 
 
 def anneal(x0: Schedule,
@@ -65,57 +150,27 @@ def anneal(x0: Schedule,
            cooling: float = 1.05,          # the paper's L:  T <- T * L^-1
            seed: int = 0,
            on_step: Callable[[AnnealStep], None] | None = None) -> AnnealResult:
-    if cooling <= 1.0:
-        raise ValueError(f"cooling must be > 1 (T <- T/L each step), "
-                         f"got {cooling}: the loop would never terminate")
-    rng = np.random.default_rng(seed)
-    t0_raw = energy(x0)
-    if not math.isfinite(t0_raw) or t0_raw <= 0:
-        raise ValueError("initial schedule must be runnable (finite positive energy)")
-
-    def norm(e_raw: float) -> float:
-        return e_raw / t0_raw if math.isfinite(e_raw) else float("inf")
-
-    x, e_x = x0, 1.0
-    x_best, e_best, raw_best = x0, 1.0, t0_raw
-    history: list[AnnealStep] = []
-    evals = 1
-    T = t_max
-    step = 0
-    while T > t_min:
-        cand = perturb(x, rng)
-        if cand is None:                   # no legal action from x
-            T /= cooling
-            step += 1
-            continue
-        e_raw = energy(cand)
-        evals += 1
-        e_c = norm(e_raw)
-        dE = e_c - e_x
-        accepted = False
-        if dE < 0:
-            x, e_x = cand, e_c
-            accepted = True
-            if e_c < e_best:
-                x_best, e_best, raw_best = cand, e_c, e_raw
-        elif math.isfinite(dE) and rng.random() < math.exp(-dE / T):
-            x, e_x = cand, e_c
-            accepted = True
-        rec = AnnealStep(step=step, temperature=T, energy=e_c,
-                         reward=-dE if math.isfinite(dE) else 0.0,
-                         accepted=accepted, best_energy=e_best)
-        history.append(rec)
-        if on_step is not None:
-            on_step(rec)
-        T /= cooling
-        step += 1
-    return AnnealResult(best=x_best, best_energy=e_best, best_raw=raw_best,
-                        initial_raw=t0_raw, history=history, evals=evals)
+    stats = getattr(energy, "stats", None)
+    before = stats() if callable(stats) else None
+    chain = Chain(x0, energy, perturb, t_max=t_max, t_min=t_min,
+                  cooling=cooling, seed=seed, on_step=on_step)
+    while not chain.done:
+        chain.advance()
+    res = chain.result()
+    if before is not None:
+        after = stats()
+        res.cache_stats = {k: after[k] - before.get(k, 0) for k in after}
+    return res
 
 
 def multi_round(x0: Schedule, energy, perturb, *, rounds: int = 4,
                 seed: int = 0, **kw) -> list[AnnealResult]:
     """§4.1: "SIP is expected to perform offline searches and store results
     from multiple rounds of searches" — independent restarts, greedily ranked
-    by the caller (see core.cache)."""
+    by the caller (see core.cache).
+
+    This is the paper-faithful sequential form; the tuning hot path
+    (``SipKernel.tune``) now runs :func:`repro.core.population.population_anneal`
+    instead, which generalizes these restarts to lockstep chains with shared
+    memoized energy (``chains=1`` reproduces one restart bit-for-bit)."""
     return [anneal(x0, energy, perturb, seed=seed + r, **kw) for r in range(rounds)]

@@ -14,15 +14,58 @@ replace so concurrent searches do not corrupt it.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import os
 import tempfile
 import threading
 import warnings
-from typing import Any
+from typing import Any, Callable
 
 from repro.core.schedule import Schedule
+
+
+class LRUCache:
+    """Small bounded LRU with hit/miss accounting.
+
+    Used by ``SipKernel.tune`` to share built (jit'd) kernels between the
+    step-test gate, wall-clock timing, and the final heavy test — one
+    ``_build`` per schedule instead of three — while bounding the number of
+    live compiled executables the search keeps around.
+    """
+
+    def __init__(self, maxsize: int = 32):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self._data: collections.OrderedDict[Any, Any] = collections.OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._data
+
+    def get_or_build(self, key: Any, build: Callable[[], Any]) -> Any:
+        """Return the cached value for ``key``, building (and possibly
+        evicting the least-recently-used entry) on miss."""
+        if key in self._data:
+            self.hits += 1
+            self._data.move_to_end(key)
+            return self._data[key]
+        self.misses += 1
+        value = build()
+        self._data[key] = value
+        if len(self._data) > self.maxsize:
+            self._data.popitem(last=False)
+        return value
+
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._data)}
 
 
 @dataclasses.dataclass

@@ -71,8 +71,7 @@ class WallClockEnergy:
             fn = self.build(schedule)
             args = self.make_args()
             for _ in range(self.warmup):
-                out = fn(*args)
-            _block(out)
+                _block(fn(*args))
             times = []
             for _ in range(self.iters):
                 t0 = time.perf_counter()
@@ -99,6 +98,53 @@ def _leaves(x: Any):
             yield from _leaves(v)
     else:
         yield x
+
+
+class CachedEnergy:
+    """Memoizing energy wrapper keyed on ``Schedule.signature()``.
+
+    The SIP hot loop re-evaluates schedules constantly — Metropolis rejections
+    re-propose from the same state, reverted moves regenerate earlier
+    candidates, and every chain of a population search starts from the same
+    x0.  Wrapping the (deterministic) energy makes all revisits free; the
+    hit/miss counters are surfaced in ``AnnealResult.cache_stats`` /
+    ``PopulationResult.cache_stats``.
+
+    Share ONE instance across chains and rounds: the cache is exactly as
+    deterministic as the wrapped energy.  Wrapping a stochastic energy
+    freezes its first observation per schedule — for :class:`WallClockEnergy`
+    a hit returns the first measurement instead of re-timing, and for
+    :class:`GuardedEnergy` the probabilistic step-test verdict is drawn once
+    per schedule rather than per revisit — trading noise re-sampling for
+    throughput.  Callers that need a fresh verdict per visit (or a heavier
+    final gate, as ``SipKernel.tune`` runs before caching) must arrange it
+    outside the wrapper.
+    """
+
+    def __init__(self, energy: Callable[[Schedule], float],
+                 maxsize: int | None = None):
+        self.energy = energy
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+        self._memo: dict[str, float] = {}
+
+    def __call__(self, schedule: Schedule) -> float:
+        key = schedule.signature()
+        cached = self._memo.get(key)
+        if cached is not None:
+            self.hits += 1
+            return cached
+        self.misses += 1
+        e = self.energy(schedule)
+        if self.maxsize is not None and len(self._memo) >= self.maxsize:
+            self._memo.pop(next(iter(self._memo)))   # FIFO bound
+        self._memo[key] = e
+        return e
+
+    def stats(self) -> dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "size": len(self._memo)}
 
 
 @dataclasses.dataclass

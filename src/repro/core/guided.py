@@ -22,10 +22,28 @@ from repro.core.mutation import MutationPolicy
 from repro.core.schedule import Schedule
 
 
+_MEMO_MAX = 65536
+
+
 @dataclasses.dataclass
 class GuidedMutationPolicy(MutationPolicy):
     greed: float = 0.5
     machine: costmodel.Machine = costmodel.V5E
+    # simulate() memo keyed on (knob point, order): a greedy sweep scores
+    # every legal +-1 move, and neighbouring states share almost all of them,
+    # so revisited orders dominate — the same memoization argument as
+    # energy.CachedEnergy, one level down
+    _memo: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def _simulate(self, knob_key: str, program: Program,
+                  order: tuple[int, ...]) -> float:
+        key = (knob_key, order)
+        t = self._memo.get(key)
+        if t is None:
+            if len(self._memo) >= _MEMO_MAX:
+                self._memo.clear()
+            t = self._memo[key] = costmodel.simulate(program, order, self.machine)
+        return t
 
     def propose(self, schedule: Schedule, rng: np.random.Generator) -> Schedule | None:
         # greed<=0 degenerates to the paper's policy exactly (same rng stream)
@@ -36,12 +54,13 @@ class GuidedMutationPolicy(MutationPolicy):
         moves = program.legal_moves(order)
         if not moves:
             return super().propose(schedule, rng)
+        knob_key = schedule.knob_signature()
         best_order, best_t = None, float("inf")
         for idx, direction in moves:
             cand = program.move(order, idx, direction)
             if cand is None:
                 continue
-            t = costmodel.simulate(program, cand, self.machine)
+            t = self._simulate(knob_key, program, tuple(cand))
             if t < best_t:
                 best_order, best_t = cand, t
         if best_order is None or best_order == tuple(order):

@@ -21,8 +21,8 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
-from repro.core import annealing, energy as energy_mod, testing
-from repro.core.cache import ScheduleCache
+from repro.core import annealing, energy as energy_mod, population, testing
+from repro.core.cache import LRUCache, ScheduleCache
 from repro.core.ir import Program
 from repro.core.mutation import MutationPolicy
 from repro.core.schedule import Schedule, SearchSpace
@@ -43,6 +43,12 @@ class TuneConfig:
     atol: float = 2e-2
     guided: bool = False          # beyond-paper cost-model-guided proposals
     greed: float = 0.5            # P(greedy action) when guided
+    # --- population / throughput knobs (beyond-paper, core.population) ----
+    chains: int = 1               # 1 == paper-faithful sequential chain
+    exchange_every: int = 16      # lockstep rounds between best-state exchanges
+    ladder: float = 1.5           # T_max ratio between temperature rungs
+    memoize: bool = True          # share a CachedEnergy across chains+rounds
+    build_cache: int = 32         # bounded LRU of built kernels per tune()
 
 
 def _make_policy(config: TuneConfig, space: SearchSpace,
@@ -110,22 +116,41 @@ class SipKernel:
         return fn(*args)
 
     # ---------------------------------------------------------------- tuning
-    def tune(self, example_args: Sequence[Any], config: TuneConfig = TuneConfig(),
+    def tune(self, example_args: Sequence[Any],
+             config: TuneConfig | None = None,
              verbose: bool = False) -> list[annealing.AnnealResult]:
+        config = TuneConfig() if config is None else config
         static = self.static_of(*example_args)
         sig = self.sig_str(static)
         space = self._space_for(**static)
         specs = [testing.InputSpec(tuple(a.shape), a.dtype) for a in example_args]
         rng = np.random.default_rng(config.seed + 10_000)
 
+        # programs depend only on the knobs (order is resolved against them),
+        # so one IR build serves every permutation of a knob point — this is
+        # hit by BOTH the mutation policy and the cost-model energy.
+        programs: dict[str, Program] = {}
+
         def program_for(s: Schedule) -> Program:
-            return self._program_for(s, **static)
+            key = s.knob_signature()
+            prog = programs.get(key)
+            if prog is None:
+                prog = programs[key] = self._program_for(s, **static)
+            return prog
+
+        # one built (jit'd) kernel per schedule, shared by the step-test
+        # gate, wall-clock timing, and the final heavy test; bounded LRU so
+        # a long search does not pin every compiled executable
+        builds = LRUCache(maxsize=config.build_cache)
+
+        def built(s: Schedule) -> Callable[..., Any]:
+            return builds.get_or_build(
+                s.signature(), lambda: self._build(s, **static))
 
         def step_test(s: Schedule) -> bool:
             if config.step_samples <= 0:
                 return True
-            fn = self._build(s, **static)
-            rep = testing.probabilistic_test(fn, self.oracle, specs,
+            rep = testing.probabilistic_test(built(s), self.oracle, specs,
                                              config.step_samples, rng,
                                              rtol=config.rtol, atol=config.atol)
             return rep.passed
@@ -134,34 +159,53 @@ class SipKernel:
             base = energy_mod.CostModelEnergy(program_for)
         elif config.energy == "wallclock":
             base = energy_mod.WallClockEnergy(
-                build=lambda s: self._build(s, **static),
+                build=built,
                 make_args=lambda: [sp.sample(rng) for sp in specs])
         else:
             raise ValueError(config.energy)
-        guarded = energy_mod.GuardedEnergy(base, step_test)
+        guarded: Callable[[Schedule], float] = energy_mod.GuardedEnergy(base, step_test)
+        if config.memoize:
+            # shared across all chains AND rounds: revisited schedules are
+            # free.  This also freezes each schedule's step-test verdict at
+            # its first evaluation (legacy re-drew step_samples inputs per
+            # revisit); the final `final_samples` heavy test below remains
+            # the authoritative gate on anything that can reach the cache,
+            # and memoize=False restores per-revisit re-testing.
+            guarded = energy_mod.CachedEnergy(guarded)
         policy = _make_policy(config, space, program_for)
         x0 = self.default_schedule(static)
 
         results = []
         for r in range(config.rounds):
-            res = annealing.anneal(
-                x0, guarded, policy.propose,
+            # chains==1 with seed offset r*1 reproduces the legacy sequential
+            # restart (anneal(seed=config.seed+r)) bit-for-bit
+            pop = population.population_anneal(
+                x0, guarded, policy.propose, chains=config.chains,
                 t_max=config.t_max, t_min=config.t_min,
-                cooling=config.cooling, seed=config.seed + r)
+                cooling=config.cooling, ladder=config.ladder,
+                exchange_every=config.exchange_every,
+                seed=config.seed + r * config.chains, memoize=False)
+            res = pop.best_result()
             results.append(res)
             # final, heavier probabilistic test before the entry may be ranked
-            fn = self._build(res.best, **static)
-            rep = testing.probabilistic_test(fn, self.oracle, specs,
+            rep = testing.probabilistic_test(built(res.best), self.oracle, specs,
                                              config.final_samples, rng,
                                              rtol=config.rtol, atol=config.atol)
+            meta: dict[str, Any] = dict(improvement=res.improvement,
+                                        evals=pop.evals, chains=config.chains,
+                                        exchanges=pop.exchanges)
+            if res.cache_stats is not None:
+                meta["cache_stats"] = res.cache_stats
             self.cache.put(self.name, sig, res.best, energy=res.best_raw,
                            tests_passed=rep.passed, test_samples=rep.samples_run,
-                           round_id=r, improvement=res.improvement,
-                           evals=res.evals)
+                           round_id=r, **meta)
             self._resolved.pop(sig, None)    # new entries re-resolve on call
             if verbose:
+                hits = (res.cache_stats or {}).get("hits", 0)
                 print(f"[sip:{self.name}] round {r}: best={res.best_raw:.3e}s "
-                      f"improvement={res.improvement:+.2%} tests="
+                      f"improvement={res.improvement:+.2%} "
+                      f"chains={config.chains} evals={pop.evals} "
+                      f"cache_hits={hits} tests="
                       f"{'PASS' if rep.passed else 'FAIL'}({rep.samples_run})")
         return results
 

@@ -83,3 +83,8 @@ class Schedule:
 
     def signature(self) -> str:
         return self.to_json()
+
+    def knob_signature(self) -> str:
+        """Canonical key for the knob point alone — the Program IR depends
+        only on knobs, so program/simulation memos key on this."""
+        return json.dumps(dict(self.knobs), sort_keys=True, default=str)

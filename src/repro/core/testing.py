@@ -48,23 +48,58 @@ def probabilistic_test(candidate: Callable[..., Any],
                        rng: np.random.Generator,
                        rtol: float = 2e-2,
                        atol: float = 2e-2,
-                       batch: int = 16) -> TestReport:
+                       batch: int = 16,
+                       vectorize: str = "auto") -> TestReport:
     """Run up to ``n_samples`` random trials; stop at the first mismatch.
 
-    ``batch`` draws that many input sets per outer loop purely to amortize
-    dispatch; semantics match one-at-a-time testing.
+    All ``batch`` input sets of an outer iteration are drawn up front (in the
+    same sample-major order one-at-a-time testing would draw them), stacked
+    along a new leading axis, and evaluated together:
+
+    * ``vectorize="vmap"`` — one ``jax.vmap`` call per batch for candidate and
+      oracle (one dispatch for the whole batch; the win measured in
+      ``benchmarks/search_throughput.py``);
+    * ``vectorize="loop"`` — per-sample calls over the pre-drawn stack, for
+      callables vmap cannot trace (numpy oracles, :class:`FaultInjector`);
+    * ``vectorize="auto"`` (default) — try vmap once, fall back to loop for
+      the rest of the call if it raises.
+
+    Reported pass/fail, ``samples_run``, ``first_failure`` and ``max_err``
+    are identical across modes and to one-at-a-time testing: comparisons run
+    per sample in draw order and stop at the first mismatch.
     """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if vectorize not in ("auto", "vmap", "loop"):
+        raise ValueError(f"vectorize must be auto|vmap|loop, got {vectorize!r}")
+    use_vmap = vectorize in ("auto", "vmap")
+    vmapped: tuple[Callable, Callable] | None = None
     max_err = 0.0
     done = 0
     while done < n_samples:
         todo = min(batch, n_samples - done)
-        for _ in range(todo):
-            args = [s.sample(rng) for s in specs]
-            got = np.asarray(candidate(*args))
-            want = np.asarray(oracle(*args))
-            err = _rel_err(got, want)
+        draws = [[s.sample(rng) for s in specs] for _ in range(todo)]
+        stacked = [np.stack([d[i] for d in draws]) for i in range(len(specs))]
+        got = want = None
+        if use_vmap:
+            try:
+                if vmapped is None:
+                    import jax
+                    vmapped = (jax.vmap(candidate), jax.vmap(oracle))
+                got = np.asarray(vmapped[0](*stacked))
+                want = np.asarray(vmapped[1](*stacked))
+            except Exception:
+                if vectorize == "vmap":
+                    raise
+                got = want = None          # candidate may have vmapped fine
+                use_vmap = False           # auto: loop for the rest of the call
+        if got is None:
+            got = np.stack([np.asarray(candidate(*d)) for d in draws])
+            want = np.stack([np.asarray(oracle(*d)) for d in draws])
+        for j in range(todo):
+            err = _rel_err(got[j], want[j])
             max_err = max(max_err, err)
-            ok = np.allclose(got, want, rtol=rtol, atol=atol)
+            ok = np.allclose(got[j], want[j], rtol=rtol, atol=atol)
             done += 1
             if not ok:
                 return TestReport(False, done, first_failure=done, max_err=max_err)

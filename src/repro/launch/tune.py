@@ -72,13 +72,24 @@ def main() -> None:
                     help="use the beyond-paper guided mutation policy")
     ap.add_argument("--greed", type=float, default=0.5,
                     help="P(greedy proposal) when --guided (default 0.5)")
+    ap.add_argument("--chains", type=int, default=1,
+                    help="population chains per round on a temperature "
+                         "ladder (1 == paper-faithful sequential search)")
+    ap.add_argument("--exchange-every", type=int, default=16,
+                    help="lockstep rounds between best-state exchanges "
+                         "(0 disables migration)")
+    ap.add_argument("--no-memoize", action="store_true",
+                    help="disable the shared energy cache (re-evaluate "
+                         "revisited schedules)")
     args = ap.parse_args()
 
     cache = ScheduleCache(args.cache)
     cfg = TuneConfig(rounds=args.rounds, cooling=args.cooling,
                      final_samples=args.final_samples,
                      step_samples=1,
-                     guided=args.guided, greed=args.greed)
+                     guided=args.guided, greed=args.greed,
+                     chains=args.chains, exchange_every=args.exchange_every,
+                     memoize=not args.no_memoize)
     rng = np.random.default_rng(0)
     for name in (args.kernel or list(KERNELS)):
         print(f"[tune] {name}")

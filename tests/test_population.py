@@ -1,0 +1,303 @@
+"""Population search, energy memoization, vectorized testing, build LRU."""
+
+import inspect
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import (CachedEnergy, CostModelEnergy, FaultInjector,
+                        InputSpec, Instr, Kind, LRUCache, MutationPolicy,
+                        Schedule, SearchSpace, SipKernel, TuneConfig,
+                        WallClockEnergy, anneal, population_anneal,
+                        probabilistic_test)
+from repro.core.ir import Program
+
+
+def make_latency_program(n_steps=6):
+    instrs = []
+    for s in range(n_steps):
+        instrs.append(Instr(name=f"ld{s}", kind=Kind.MEM, inputs=(),
+                            outputs=(f"x{s}",), fn=lambda env: {},
+                            buffer=f"B{s}", bytes=1 << 16))
+        instrs.append(Instr(name=f"mm{s}", kind=Kind.COMPUTE, inputs=(f"x{s}",),
+                            outputs=(f"y{s}",), fn=lambda env: {},
+                            flops=1 << 18))
+    return Program(instrs)
+
+
+def _setup(n_steps=6):
+    p = make_latency_program(n_steps)
+    policy = MutationPolicy(space=SearchSpace(), program_for=lambda s: p)
+    energy = CostModelEnergy(program_for=lambda s: p)
+    return p, policy, energy
+
+
+class TestPopulationAnneal:
+    def test_single_chain_bit_identical_to_anneal(self):
+        """chains=1: same seed => identical trajectory, not just same best."""
+        _, policy, energy = _setup()
+        ref = anneal(Schedule(), energy, policy.propose, seed=7, cooling=1.05)
+        pop = population_anneal(Schedule(), energy, policy.propose, chains=1,
+                                seed=7, cooling=1.05, memoize=False)
+        got = pop.chains[0]
+        assert got.best.order == ref.best.order
+        assert got.best_raw == ref.best_raw
+        assert got.evals == ref.evals
+        assert got.history == ref.history
+
+    def test_single_chain_identical_with_memoization(self):
+        """Memoizing a deterministic energy never changes search results."""
+        _, policy, energy = _setup()
+        ref = anneal(Schedule(), energy, policy.propose, seed=3, cooling=1.05)
+        pop = population_anneal(Schedule(), energy, policy.propose, chains=1,
+                                seed=3, cooling=1.05, memoize=True)
+        assert pop.chains[0].best.order == ref.best.order
+        assert pop.chains[0].best_raw == ref.best_raw
+
+    def test_seeded_determinism(self):
+        _, policy, energy = _setup()
+        a = population_anneal(Schedule(), energy, policy.propose, chains=4,
+                              seed=11, cooling=1.05, exchange_every=8)
+        b = population_anneal(Schedule(), energy, policy.propose, chains=4,
+                              seed=11, cooling=1.05, exchange_every=8)
+        assert a.best.order == b.best.order
+        assert a.best_energy == b.best_energy
+        assert a.exchanges == b.exchanges
+        assert [c.best_energy for c in a.chains] == \
+            [c.best_energy for c in b.chains]
+
+    def test_population_improves_and_is_legal(self):
+        p, policy, energy = _setup()
+        pop = population_anneal(Schedule(), energy, policy.propose, chains=4,
+                                seed=0, cooling=1.05, exchange_every=8)
+        assert pop.improvement > 0
+        assert p.is_legal(pop.best.order)
+        # the winning chain's best is at least as good as every chain's
+        assert all(pop.best_energy <= c.best_energy for c in pop.chains)
+
+    def test_exchange_migrates_states(self):
+        _, policy, energy = _setup()
+        pop = population_anneal(Schedule(), energy, policy.propose, chains=4,
+                                seed=0, cooling=1.05, exchange_every=4)
+        assert pop.exchanges > 0
+        off = population_anneal(Schedule(), energy, policy.propose, chains=4,
+                                seed=0, cooling=1.05, exchange_every=0)
+        assert off.exchanges == 0
+
+    def test_shared_cache_across_chains(self):
+        """All K chains start from x0: K-1 of the initial evals are hits."""
+        _, policy, energy = _setup()
+        pop = population_anneal(Schedule(), energy, policy.propose, chains=4,
+                                seed=0, cooling=1.1)
+        stats = pop.cache_stats
+        assert stats is not None
+        assert stats["hits"] >= 3                       # the shared x0 evals
+        assert stats["hits"] + stats["misses"] == pop.evals
+
+    def test_bad_args_rejected(self):
+        _, policy, energy = _setup(2)
+        with pytest.raises(ValueError, match="chains"):
+            population_anneal(Schedule(), energy, policy.propose, chains=0)
+        with pytest.raises(ValueError, match="ladder"):
+            population_anneal(Schedule(), energy, policy.propose, ladder=0.5)
+
+
+class TestCachedEnergy:
+    def test_hit_miss_accounting(self):
+        calls = {"n": 0}
+
+        def energy(s):
+            calls["n"] += 1
+            return 1.0 + len(s.knobs)
+
+        ce = CachedEnergy(energy)
+        a, b = Schedule(knobs={"bm": 1}), Schedule(knobs={"bm": 2})
+        assert ce(a) == ce(a) == ce(a)
+        ce(b)
+        assert calls["n"] == 2                 # one real eval per signature
+        assert ce.stats() == {"hits": 2, "misses": 2, "size": 2}
+
+    def test_anneal_surfaces_cache_stats(self):
+        _, policy, energy = _setup()
+        res = anneal(Schedule(), CachedEnergy(energy), policy.propose,
+                     seed=0, cooling=1.1)
+        assert res.cache_stats is not None
+        assert res.cache_stats["hits"] + res.cache_stats["misses"] == res.evals
+
+    def test_bounded(self):
+        ce = CachedEnergy(lambda s: float(len(s.knobs)), maxsize=2)
+        for i in range(5):
+            ce(Schedule(knobs={f"k{j}": 1 for j in range(i)}))
+        assert ce.stats()["size"] <= 2
+
+
+class TestVectorizedTesting:
+    SPECS = [InputSpec((8,))]
+
+    def test_loop_matches_serial_batching(self):
+        """batch=16 (loop mode) == batch=1: same report, same rng draws."""
+        oracle = lambda x: np.asarray(x) * 2.0
+        bad = FaultInjector(oracle, threshold=3.0, corruption=0.5)
+        for fn in (oracle, bad):
+            a = probabilistic_test(fn, oracle, self.SPECS, 200,
+                                   np.random.default_rng(0), rtol=1e-3,
+                                   atol=1e-3, batch=1, vectorize="loop")
+            b = probabilistic_test(fn, oracle, self.SPECS, 200,
+                                   np.random.default_rng(0), rtol=1e-3,
+                                   atol=1e-3, batch=16, vectorize="loop")
+            assert (a.passed, a.samples_run, a.first_failure, a.max_err) == \
+                (b.passed, b.samples_run, b.first_failure, b.max_err)
+
+    def test_auto_falls_back_for_numpy_callables(self):
+        """FaultInjector is numpy — vmap can't trace it; auto must still
+        produce the loop-mode report (same pass/fail and max_err)."""
+        oracle = lambda x: np.asarray(x) * 2.0
+        bad = FaultInjector(oracle, threshold=3.0, corruption=0.5)
+        a = probabilistic_test(bad, oracle, self.SPECS, 500,
+                               np.random.default_rng(1), rtol=1e-3, atol=1e-3,
+                               vectorize="auto")
+        b = probabilistic_test(bad, oracle, self.SPECS, 500,
+                               np.random.default_rng(1), rtol=1e-3, atol=1e-3,
+                               vectorize="loop")
+        assert (a.passed, a.samples_run, a.first_failure, a.max_err) == \
+            (b.passed, b.samples_run, b.first_failure, b.max_err)
+
+    def test_auto_falls_back_when_only_oracle_is_numpy(self):
+        """Regression: vmap succeeding on the candidate but raising on the
+        oracle must fall back cleanly, not crash on a half-filled batch."""
+        import jax.numpy as jnp
+
+        cand = lambda x: jnp.asarray(x) * 2.0
+        oracle = lambda x: np.asarray(x) * 2.0     # numpy: untraceable
+        rep = probabilistic_test(cand, oracle, self.SPECS, 32,
+                                 np.random.default_rng(0), vectorize="auto")
+        assert rep.passed and rep.samples_run == 32
+
+    def test_vmap_path_on_jax_callable(self):
+        import jax.numpy as jnp
+
+        f = lambda x: jnp.asarray(x) * 2.0
+        rep = probabilistic_test(f, f, self.SPECS, 64,
+                                 np.random.default_rng(0), vectorize="vmap")
+        assert rep.passed and rep.samples_run == 64
+
+    def test_vmap_detects_fault_like_loop(self):
+        import jax.numpy as jnp
+
+        oracle = lambda x: jnp.asarray(x) * 2.0
+        bad = lambda x: jnp.asarray(x) * 2.0 + 0.5   # uniformly wrong
+        v = probabilistic_test(bad, oracle, self.SPECS, 64,
+                               np.random.default_rng(0), rtol=1e-3, atol=1e-3,
+                               vectorize="vmap")
+        l = probabilistic_test(bad, oracle, self.SPECS, 64,
+                               np.random.default_rng(0), rtol=1e-3, atol=1e-3,
+                               vectorize="loop")
+        assert not v.passed and not l.passed
+        assert v.first_failure == l.first_failure == 1
+
+    def test_bad_args_rejected(self):
+        f = lambda x: x
+        with pytest.raises(ValueError, match="batch"):
+            probabilistic_test(f, f, self.SPECS, 4,
+                               np.random.default_rng(0), batch=0)
+        with pytest.raises(ValueError, match="vectorize"):
+            probabilistic_test(f, f, self.SPECS, 4,
+                               np.random.default_rng(0), vectorize="nope")
+
+
+class TestWallClockEnergy:
+    def test_warmup_zero_regression(self):
+        """warmup=0 used to hit an UnboundLocalError inside the catch-all and
+        silently report FAILED for a perfectly good kernel."""
+        e = WallClockEnergy(build=lambda s: (lambda x: x * 2.0),
+                            make_args=lambda: [np.ones(4, np.float32)],
+                            warmup=0, iters=2)
+        t = e(Schedule())
+        assert np.isfinite(t) and t > 0
+
+
+class TestLRUCache:
+    def test_eviction_and_stats(self):
+        lru = LRUCache(maxsize=2)
+        assert lru.get_or_build("a", lambda: 1) == 1
+        assert lru.get_or_build("b", lambda: 2) == 2
+        assert lru.get_or_build("a", lambda: 99) == 1     # hit, refreshed
+        lru.get_or_build("c", lambda: 3)                  # evicts b (LRU)
+        assert "b" not in lru and "a" in lru and "c" in lru
+        assert lru.stats() == {"hits": 1, "misses": 3, "size": 2}
+
+    def test_maxsize_validated(self):
+        with pytest.raises(ValueError, match="maxsize"):
+            LRUCache(maxsize=0)
+
+
+class TestTuneIntegration:
+    def test_config_default_is_none_not_shared_instance(self):
+        assert inspect.signature(SipKernel.tune).parameters["config"].default \
+            is None
+
+    def test_population_tune_on_gemm(self):
+        from repro.kernels.gemm_fused import ops as gemm_ops
+        from repro.kernels.gemm_fused import ref as gemm_ref
+
+        rng = np.random.default_rng(0)
+        kern = gemm_ops.make()
+        x = rng.standard_normal((16, 32)).astype(np.float32)
+        w = rng.standard_normal((32, 16)).astype(np.float32)
+        cfg = TuneConfig(rounds=1, t_min=0.25, cooling=1.25, step_samples=1,
+                         final_samples=4, chains=3, exchange_every=4)
+        res = kern.tune([x, w], cfg)
+        assert len(res) == 1 and res[0].improvement >= 0
+        assert res[0].cache_stats is not None      # memoization on by default
+        np.testing.assert_allclose(np.asarray(kern(x, w)),
+                                   np.asarray(gemm_ref.gemm_leaky_relu(x, w)),
+                                   rtol=1e-4, atol=1e-4)
+        ent = kern.cache.entries(gemm_ops.NAME,
+                                 kern.sig_str(kern.static_of(x, w)))
+        assert ent and ent[0].meta["chains"] == 3
+
+    def test_build_lru_shares_builds_across_gates(self):
+        """step_test + final test + (implicitly) timing share one build per
+        schedule: _build calls == LRU misses <= distinct schedules tested."""
+        from repro.kernels.rmsnorm import ops as rms_ops
+
+        rng = np.random.default_rng(0)
+        kern = rms_ops.make()
+        builds = {"n": 0}
+        inner = kern._build
+
+        def counting_build(s, **static):
+            builds["n"] += 1
+            return inner(s, **static)
+
+        kern._build = counting_build
+        x = rng.standard_normal((16, 32)).astype(np.float32)
+        g = rng.standard_normal((32,)).astype(np.float32)
+        cfg = TuneConfig(rounds=2, t_min=0.25, cooling=1.25, step_samples=1,
+                         final_samples=2)
+        res = kern.tune([x, g], cfg)
+        evals = sum(r.evals for r in res)
+        # legacy behavior was >= evals + rounds builds (step test + final
+        # test each rebuilt); the LRU must do strictly better than one build
+        # per energy query
+        assert builds["n"] < evals + len(res)
+
+    def test_cli_population_flags_reach_tune_config(self, monkeypatch, tmp_path):
+        from repro.launch import tune
+
+        seen = {}
+        monkeypatch.setattr(
+            tune, "KERNELS",
+            {"fake": lambda cache, cfg, rng: seen.__setitem__("cfg", cfg)})
+        base = ["tune", "--cache", str(tmp_path / "c.json"), "--kernel", "fake"]
+        monkeypatch.setattr(sys, "argv",
+                            base + ["--chains", "4", "--exchange-every", "8",
+                                    "--no-memoize"])
+        tune.main()
+        assert seen["cfg"].chains == 4
+        assert seen["cfg"].exchange_every == 8
+        assert seen["cfg"].memoize is False
+        monkeypatch.setattr(sys, "argv", base)
+        tune.main()
+        assert seen["cfg"].chains == 1 and seen["cfg"].memoize is True
