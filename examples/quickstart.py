@@ -2,45 +2,49 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-This is the paper's Listing 2 workflow: take a kernel, run the offline
-stochastic search (simulated annealing over dependency-legal instruction
-reorderings, probabilistically tested against the oracle at every step),
-persist the best schedule, and deploy with zero runtime overhead.
+This is the paper's Listing 2 workflow on the registry API: kernels are
+*declared* (a ``@sip_kernel``-registered ``KernelSpec`` with their own
+workloads), resolved by name, tuned offline (simulated annealing over
+dependency-legal instruction reorderings, probabilistically tested against
+the oracle at every step), and deployed from the persisted schedule cache
+with zero runtime overhead.
 """
 
 import numpy as np
 
-from repro.core import ScheduleCache
-from repro.core.jit import TuneConfig
+from repro.core import TuneConfig, registry, schedule_cache
 from repro.kernels.gemm_fused import ops as gemm_ops
 from repro.kernels.gemm_fused import ref
 
 
 def main() -> None:
-    # a persistent cache — deployment reloads tuned schedules from here
-    kernel = gemm_ops.make(cache=ScheduleCache("/tmp/sip_cache.json"))
+    # a persistent cache — deployment reloads tuned schedules from here.
+    # schedule_cache scopes the active store; registry.get resolves the ONE
+    # shared kernel instance bound to it.
+    with schedule_cache("/tmp/sip_cache.json"):
+        kernel = registry.get(gemm_ops.NAME)
 
-    x = np.random.default_rng(0).standard_normal((128, 256)).astype(np.float32)
-    w = np.random.default_rng(1).standard_normal((256, 128)).astype(np.float32)
+        x = np.random.default_rng(0).standard_normal((128, 256)).astype(np.float32)
+        w = np.random.default_rng(1).standard_normal((256, 128)).astype(np.float32)
 
-    # 1. baseline: compiler-like schedule
-    y0 = kernel(x, w)
-    assert np.allclose(y0, ref.gemm_leaky_relu(x, w), atol=1e-4)
-    print("baseline schedule runs and is correct")
+        # 1. baseline: compiler-like schedule
+        y0 = kernel(x, w)
+        assert np.allclose(y0, ref.gemm_leaky_relu(x, w), atol=1e-4)
+        print("baseline schedule runs and is correct")
 
-    # 2. offline SIP search (paper Alg. 1 + §4.2 testing), two rounds
-    results = kernel.tune([x, w],
-                          TuneConfig(rounds=2, cooling=1.05, t_min=0.05,
-                                     step_samples=2, final_samples=32),
-                          verbose=True)
-    best = min(results, key=lambda r: r.best_raw)
-    print(f"SIP improvement: {best.improvement:.2%} "
-          f"({best.evals} schedules evaluated)")
+        # 2. offline SIP search (paper Alg. 1 + §4.2 testing), two rounds
+        results = kernel.tune([x, w],
+                              TuneConfig(rounds=2, cooling=1.05, t_min=0.05,
+                                         step_samples=2, final_samples=32),
+                              verbose=True)
+        best = min(results, key=lambda r: r.best_raw)
+        print(f"SIP improvement: {best.improvement:.2%} "
+              f"({best.evals} schedules evaluated)")
 
-    # 3. deployment: the tuned schedule loads from the cache transparently
-    y1 = kernel(x, w)
-    assert np.allclose(y1, ref.gemm_leaky_relu(x, w), atol=1e-4)
-    print("tuned schedule deployed from cache and is correct")
+        # 3. deployment: the tuned schedule loads from the cache transparently
+        y1 = kernel(x, w)
+        assert np.allclose(y1, ref.gemm_leaky_relu(x, w), atol=1e-4)
+        print("tuned schedule deployed from cache and is correct")
 
 
 if __name__ == "__main__":

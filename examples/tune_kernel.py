@@ -9,7 +9,7 @@ the latency-hiding schedule that hand-tuning produces on GPUs and that the
 Pallas default ordering does not express.
 """
 
-from repro.core import annealing, energy as energy_mod
+from repro.core import annealing, energy as energy_mod, registry
 from repro.core.mutation import MutationPolicy
 from repro.core.schedule import Schedule
 from repro.kernels.flash_attention import ops as fa_ops
@@ -19,8 +19,11 @@ STATIC = dict(b=1, hq=4, hkv=4, sq=16384, skv=16384, d=64, causal=False,
 
 
 def main() -> None:
-    space = fa_ops.space(**STATIC)
-    program_for = lambda s: fa_ops.program_for(s, **STATIC)
+    # the registry hands back the kernel's declarative spec — the same six
+    # callables SipKernel.tune drives, usable piecemeal for inspection
+    spec = registry.spec(fa_ops.variant_name(causal=False, window=None))
+    space = spec.space_for(**STATIC)
+    program_for = lambda s: spec.program_for(s, **STATIC)
     knobs = space.default_knobs()
     knobs["n_chunks"] = 4
     x0 = Schedule(knobs=knobs)

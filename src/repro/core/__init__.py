@@ -10,6 +10,8 @@ Public API:
     testing.probabilistic_test           — §4.2 (vectorized batches)
     cache.ScheduleCache / LRUCache       — §4.1 offline store + build LRU
     jit.sip_jit / SipKernel / TuneConfig — one-line integration
+    registry.{KernelSpec,Workload,sip_kernel,registry,schedule_cache}
+                                         — declarative kernel registration
     costmodel                            — TPU v5e constants + simulator
 """
 
@@ -21,6 +23,10 @@ from repro.core.ir import Instr, Kind, Program
 from repro.core.jit import SipKernel, TuneConfig, sip_jit
 from repro.core.mutation import MutationPolicy
 from repro.core.population import PopulationResult, population_anneal
+from repro.core.registry import (KernelHandle, KernelRegistry, KernelSpec,
+                                 Workload, active_schedule_cache,
+                                 cache_for_path, registry, schedule_cache,
+                                 sip_kernel, workload_seed)
 from repro.core.schedule import KnobSpec, Schedule, SearchSpace
 from repro.core.testing import FaultInjector, InputSpec, TestReport, probabilistic_test
 
@@ -31,6 +37,9 @@ __all__ = [
     "CachedEnergy", "CostModelEnergy", "GuardedEnergy", "WallClockEnergy", "reward",
     "Instr", "Kind", "Program",
     "SipKernel", "TuneConfig", "sip_jit",
+    "KernelHandle", "KernelRegistry", "KernelSpec", "Workload",
+    "active_schedule_cache", "cache_for_path", "registry", "schedule_cache",
+    "sip_kernel", "workload_seed",
     "MutationPolicy",
     "KnobSpec", "Schedule", "SearchSpace",
     "FaultInjector", "InputSpec", "TestReport", "probabilistic_test",

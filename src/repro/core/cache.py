@@ -90,6 +90,10 @@ class ScheduleCache:
         self.path = path
         self._lock = threading.Lock()
         self._data: dict[str, list[dict]] = {}
+        # bumped on every put; SipKernel instances sharing this store compare
+        # it against their resolution memo so a schedule tuned through ONE
+        # instance invalidates every other instance's cached resolution
+        self.version = 0
         if path and os.path.exists(path):
             try:
                 with open(path) as f:
@@ -124,6 +128,7 @@ class ScheduleCache:
                            round_id=round_id, meta=meta)
         with self._lock:
             self._data.setdefault(self.key(kernel_name, signature), []).append(entry.to_dict())
+            self.version += 1
             self._flush()
 
     def best(self, kernel_name: str, signature: str) -> Schedule | None:

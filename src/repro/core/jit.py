@@ -50,6 +50,27 @@ class TuneConfig:
     memoize: bool = True          # share a CachedEnergy across chains+rounds
     build_cache: int = 32         # bounded LRU of built kernels per tune()
 
+    def validate(self) -> "TuneConfig":
+        """Reject configurations the search would only fail on much later
+        (or, worse, silently misbehave on).  Called by ``SipKernel.tune``
+        and ``TuningSession`` before any work starts."""
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.step_samples < 0:
+            raise ValueError(f"step_samples must be >= 0, got "
+                             f"{self.step_samples}")
+        if self.chains < 1:
+            raise ValueError(f"chains must be >= 1, got {self.chains}")
+        if self.t_min >= self.t_max:
+            raise ValueError(f"need t_min < t_max, got t_min={self.t_min} "
+                             f">= t_max={self.t_max}")
+        if self.ladder <= 0:
+            raise ValueError(f"ladder must be > 0, got {self.ladder}")
+        if self.energy not in ("costmodel", "wallclock"):
+            raise ValueError(f"unknown energy {self.energy!r} "
+                             f"(expected 'costmodel' or 'wallclock')")
+        return self
+
 
 def _make_policy(config: TuneConfig, space: SearchSpace,
                  program_for: Callable[[Schedule], Program]) -> MutationPolicy:
@@ -80,9 +101,10 @@ class SipKernel:
         self._space_for = space_for      # space_for(**static) -> SearchSpace
         self.oracle = oracle
         self._signature_fn = signature_fn
-        self.cache = cache or ScheduleCache()
+        self.cache = cache if cache is not None else ScheduleCache()
         self._built: dict[tuple[str, str], Callable[..., Any]] = {}
         self._resolved: dict[str, Callable[..., Any]] = {}
+        self._resolved_version = self.cache.version
 
     # ------------------------------------------------------------- plumbing
     def static_of(self, *args: Any) -> dict[str, Any]:
@@ -104,6 +126,12 @@ class SipKernel:
     def __call__(self, *args: Any) -> Any:
         static = self.static_of(*args)
         sig = self.sig_str(static)
+        if self._resolved_version != self.cache.version:
+            # the shared store gained entries — possibly tuned through a
+            # DIFFERENT instance bound to it — so drop resolution memos and
+            # let schedule_for pick the new best
+            self._resolved.clear()
+            self._resolved_version = self.cache.version
         fn = self._resolved.get(sig)         # steady state: one dict lookup
         if fn is None:
             sched = self.schedule_for(static)
@@ -120,6 +148,7 @@ class SipKernel:
              config: TuneConfig | None = None,
              verbose: bool = False) -> list[annealing.AnnealResult]:
         config = TuneConfig() if config is None else config
+        config.validate()
         static = self.static_of(*example_args)
         sig = self.sig_str(static)
         space = self._space_for(**static)

@@ -1,0 +1,1 @@
+"""flash_attention kernel package (kernel.py emission, ref.py oracle, SIP integration)."""

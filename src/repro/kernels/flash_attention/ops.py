@@ -1,13 +1,23 @@
-"""jit'd wrapper + SIP integration for the fused attention kernel."""
+"""SIP integration for the fused attention kernel (registry-based).
+
+Attention is a *family* of kernels — (causal, window) variants share the
+build/program/space callables but differ in oracle and name.  The common
+variants register at import; :func:`kernel` resolves (and lazily registers)
+any variant as ONE shared, registry-cached instance, so the model's
+attention path never constructs fresh kernels per call.
+"""
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.jit import SipKernel
+from repro.core.registry import KernelHandle, KernelSpec, Workload, registry
 from repro.core.schedule import KnobSpec, Schedule, SearchSpace
 from repro.kernels.flash_attention import kernel as K
 from repro.kernels.flash_attention import ref
@@ -53,10 +63,32 @@ def build(schedule: Schedule, **static):
     return jax.jit(fn)
 
 
-def make(causal: bool = True, window: int | None = None, cache=None) -> SipKernel:
-    name = "flash_attention" + ("_causal" if causal else "") + \
+def variant_name(causal: bool = True, window: int | None = None) -> str:
+    return "flash_attention" + ("_causal" if causal else "") + \
         (f"_w{window}" if window else "")
 
+
+def _attn_args(b: int, hq: int, hkv: int, s: int, d: int):
+    def make_args(rng: np.random.Generator):
+        q = rng.standard_normal((b, hq, s, d)).astype(np.float32)
+        k = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
+        v = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
+        return [q, k, v]
+    return make_args
+
+
+def register_variant(causal: bool, window: int | None,
+                     workloads: tuple[Workload, ...] = ()) -> KernelSpec:
+    """Register a (causal, window) variant, optionally with its own
+    deployment workloads.
+
+    Deployments that serve a sliding-window arch and want it OFFLINE-tuned
+    (not just lazily served with default schedules) declare it here — next
+    to the kernel, never in the launcher::
+
+        register_variant(True, 128, workloads=(
+            Workload("deploy_w128", _attn_args(1, 8, 8, 2048, 64)),))
+    """
     def signature_fn(q, k, v) -> dict:
         b, hq, sq, d = q.shape
         _, hkv, skv, _ = k.shape
@@ -65,10 +97,52 @@ def make(causal: bool = True, window: int | None = None, cache=None) -> SipKerne
                 "window": window, "dtype": str(jnp.dtype(q.dtype))}
 
     oracle = functools.partial(ref.attention, causal=causal, window=window)
-    return SipKernel(name=name, build=build, program_for=program_for,
-                     space_for=space, oracle=oracle,
-                     signature_fn=signature_fn, cache=cache)
+    return registry.register(KernelSpec(
+        name=variant_name(causal, window), build=build,
+        program_for=program_for, space_for=space, oracle=oracle,
+        signature_fn=signature_fn, workloads=workloads, module=__name__))
 
 
-flash_attention = make(causal=True)
-flash_attention_bidir = make(causal=False)
+CAUSAL_SPEC = register_variant(True, None, workloads=(
+    Workload("smoke_b1_h2kv2_s16_d8", _attn_args(1, 2, 2, 16, 8),
+             suites=("smoke",)),
+    Workload("deploy_b1_h4kv2_s128_d32", _attn_args(1, 4, 2, 128, 32)),
+))
+BIDIR_SPEC = register_variant(False, None)
+
+
+def ensure_registered(causal: bool = True, window: int | None = None) -> str:
+    """Name of the (causal, window) variant, registering it on first use."""
+    name = variant_name(causal, window)
+    if name not in registry:
+        try:
+            register_variant(causal, window)
+        except ValueError:
+            # lost a concurrent first-use race; the variant exists now
+            if name not in registry:
+                raise
+    return name
+
+
+def kernel(causal: bool = True, window: int | None = None) -> SipKernel:
+    """The shared registry instance for a variant, bound to the active
+    schedule cache — the model/serving resolution path."""
+    return registry.get(ensure_registered(causal, window))
+
+
+def make(causal: bool = True, window: int | None = None,
+         cache=None) -> SipKernel:
+    """Deprecated pre-registry constructor (fresh, unshared instance).
+
+    Use :func:`kernel` (or ``registry.get``) to share one instance and its
+    build caches."""
+    warnings.warn("flash_attention.ops.make() is deprecated; resolve the "
+                  "kernel via flash_attention.ops.kernel(causal, window) "
+                  "instead", DeprecationWarning, stacklevel=2)
+    name = ensure_registered(causal, window)
+    return registry.spec(name).instantiate(cache=cache)
+
+
+# late-binding handles: honor the schedule_cache scope active at call time
+flash_attention = KernelHandle(variant_name(True, None))
+flash_attention_bidir = KernelHandle(variant_name(False, None))

@@ -1,0 +1,1 @@
+"""gemm_fused kernel package (kernel.py emission, ref.py oracle, SIP integration)."""

@@ -1,13 +1,21 @@
-"""jit'd wrapper + SIP integration for the fused GEMM+LeakyReLU kernel."""
+"""SIP integration for the fused GEMM+LeakyReLU kernel (registry-based).
+
+The kernel registers a declarative :class:`KernelSpec` — six callables plus
+its own deployment workloads — so the offline driver, models, and serving
+all resolve it by name through ``repro.core.registry``.
+"""
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.jit import SipKernel
+from repro.core.registry import KernelHandle, Workload, sip_kernel
 from repro.core.schedule import KnobSpec, Schedule, SearchSpace
 from repro.kernels.gemm_fused import kernel as K
 from repro.kernels.gemm_fused import ref
@@ -42,6 +50,26 @@ def program_for(schedule: Schedule, *, m: int, n: int, k: int,
                           dtype=jnp.dtype(dtype))
 
 
+def signature_fn(x, w) -> dict:
+    (m, k), (_, n) = x.shape, w.shape
+    return {"m": int(m), "n": int(n), "k": int(k), "dtype": str(jnp.dtype(x.dtype))}
+
+
+def _gemm_args(m: int, n: int, k: int):
+    def make_args(rng: np.random.Generator):
+        x = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        return [x, w]
+    return make_args
+
+
+WORKLOADS = (
+    Workload("smoke_16x16x32", _gemm_args(16, 16, 32), suites=("smoke",)),
+    Workload("deploy_64x64x128", _gemm_args(64, 64, 128)),
+    Workload("deploy_128x128x256", _gemm_args(128, 128, 256)),
+)
+
+
 def build(schedule: Schedule, *, m: int, n: int, k: int,
           dtype: str = "float32"):
     bm, bn, bk = _blocks(schedule, m, n, k, dtype)
@@ -52,16 +80,22 @@ def build(schedule: Schedule, *, m: int, n: int, k: int,
     return jax.jit(fn)
 
 
-def signature_fn(x, w) -> dict:
-    (m, k), (_, n) = x.shape, w.shape
-    return {"m": int(m), "n": int(n), "k": int(k), "dtype": str(jnp.dtype(x.dtype))}
+SPEC = sip_kernel(name=NAME, program_for=program_for, space_for=space,
+                  oracle=ref.gemm_leaky_relu, signature_fn=signature_fn,
+                  workloads=WORKLOADS)(build)
 
 
 def make(cache=None) -> SipKernel:
-    return SipKernel(name=NAME, build=build, program_for=program_for,
-                     space_for=space, oracle=ref.gemm_leaky_relu,
-                     signature_fn=signature_fn, cache=cache)
+    """Deprecated pre-registry constructor (fresh, unshared instance).
+
+    Use ``registry.get(NAME)`` — optionally under ``schedule_cache(...)`` —
+    to share one instance and its build caches."""
+    warnings.warn("gemm_fused.ops.make() is deprecated; resolve the kernel "
+                  "via repro.core.registry.registry.get(ops.NAME) instead",
+                  DeprecationWarning, stacklevel=2)
+    return SPEC.instantiate(cache=cache)
 
 
-# module-level kernel instance (in-memory cache; launchers pass a persistent one)
-gemm_leaky_relu = make()
+# late-binding handle: resolves the registry's shared instance — honoring
+# the schedule_cache scope active at CALL time — on every use
+gemm_leaky_relu = KernelHandle(NAME)

@@ -1,0 +1,1 @@
+"""rmsnorm kernel package (kernel.py emission, ref.py oracle, SIP integration)."""

@@ -1,13 +1,16 @@
-"""jit'd wrapper + SIP integration for the fused RMSNorm kernel."""
+"""SIP integration for the fused RMSNorm kernel (registry-based)."""
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.jit import SipKernel
+from repro.core.registry import KernelHandle, Workload, sip_kernel
 from repro.core.schedule import KnobSpec, Schedule, SearchSpace
 from repro.kernels.rmsnorm import kernel as K
 from repro.kernels.rmsnorm import ref
@@ -41,6 +44,25 @@ def program_for(schedule: Schedule, **static):
                           rows=static["rows"])
 
 
+def signature_fn(x, gamma) -> dict:
+    rows, d = x.shape
+    return {"rows": int(rows), "d": int(d), "dtype": str(jnp.dtype(x.dtype))}
+
+
+def _rmsnorm_args(rows: int, d: int):
+    def make_args(rng: np.random.Generator):
+        x = rng.standard_normal((rows, d)).astype(np.float32)
+        g = rng.standard_normal((d,)).astype(np.float32)
+        return [x, g]
+    return make_args
+
+
+WORKLOADS = (
+    Workload("smoke_16x32", _rmsnorm_args(16, 32), suites=("smoke",)),
+    Workload("deploy_64x128", _rmsnorm_args(64, 128)),
+)
+
+
 def build(schedule: Schedule, **static):
     br, n_chunks = _knobs(schedule, **static)
     program = program_for(schedule, **static)
@@ -49,15 +71,17 @@ def build(schedule: Schedule, **static):
                                      n_chunks=n_chunks, order=order))
 
 
-def signature_fn(x, gamma) -> dict:
-    rows, d = x.shape
-    return {"rows": int(rows), "d": int(d), "dtype": str(jnp.dtype(x.dtype))}
+SPEC = sip_kernel(name=NAME, program_for=program_for, space_for=space,
+                  oracle=ref.rmsnorm, signature_fn=signature_fn,
+                  workloads=WORKLOADS)(build)
 
 
 def make(cache=None) -> SipKernel:
-    return SipKernel(name=NAME, build=build, program_for=program_for,
-                     space_for=space, oracle=ref.rmsnorm,
-                     signature_fn=signature_fn, cache=cache)
+    """Deprecated pre-registry constructor (fresh, unshared instance)."""
+    warnings.warn("rmsnorm.ops.make() is deprecated; resolve the kernel via "
+                  "repro.core.registry.registry.get(ops.NAME) instead",
+                  DeprecationWarning, stacklevel=2)
+    return SPEC.instantiate(cache=cache)
 
 
-rmsnorm = make()
+rmsnorm = KernelHandle(NAME)   # late-binding: honors the active schedule_cache

@@ -1,0 +1,1 @@
+"""ssd kernel package (kernel.py emission, ref.py oracle, SIP integration)."""

@@ -7,11 +7,14 @@ states and inter-chunk recurrence stay in jnp (they are linear-cost)."""
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.jit import SipKernel
+from repro.core.registry import KernelHandle, Workload, registry, sip_kernel
 from repro.core.schedule import Schedule, SearchSpace
 from repro.kernels.ssd import kernel as K
 from repro.kernels.ssd import ops as jops
@@ -25,12 +28,6 @@ def space(**static) -> SearchSpace:
 
 def program_for(schedule: Schedule, *, g, q, h, p, n, dtype="float32"):
     return K.make_program(q=q, n=n, p=p, dtype=jnp.dtype(dtype), grid=g * h)
-
-
-def build(schedule: Schedule, *, g, q, h, p, n, dtype="float32"):
-    program = program_for(schedule, g=g, q=q, h=h, p=p, n=n, dtype=dtype)
-    order = schedule.resolve_order(program)
-    return jax.jit(functools.partial(K.pallas_ssd_intra, order=order))
 
 
 def signature_fn(xb, la, B, C) -> dict:
@@ -50,13 +47,43 @@ def _oracle(xb, la, B, C):
                       xb.astype(jnp.float32)).astype(xb.dtype)
 
 
+def _ssd_args(g: int, q: int, h: int, p: int, n: int):
+    def make_args(rng: np.random.Generator):
+        xb = rng.standard_normal((g, q, h, p)).astype(np.float32)
+        la = -np.abs(rng.standard_normal((g, q, h))).astype(np.float32) * 0.1
+        B = rng.standard_normal((g, q, n)).astype(np.float32) * 0.3
+        C = rng.standard_normal((g, q, n)).astype(np.float32) * 0.3
+        return [xb, la, B, C]
+    return make_args
+
+
+WORKLOADS = (
+    Workload("smoke_g2_q8_h2_p4_n8", _ssd_args(2, 8, 2, 4, 8),
+             suites=("smoke",)),
+    Workload("deploy_g4_q16_h4_p8_n16", _ssd_args(4, 16, 4, 8, 16)),
+)
+
+
+def build(schedule: Schedule, *, g, q, h, p, n, dtype="float32"):
+    program = program_for(schedule, g=g, q=q, h=h, p=p, n=n, dtype=dtype)
+    order = schedule.resolve_order(program)
+    return jax.jit(functools.partial(K.pallas_ssd_intra, order=order))
+
+
+SPEC = sip_kernel(name=NAME, program_for=program_for, space_for=space,
+                  oracle=_oracle, signature_fn=signature_fn,
+                  workloads=WORKLOADS)(build)
+
+
 def make(cache=None) -> SipKernel:
-    return SipKernel(name=NAME, build=build, program_for=program_for,
-                     space_for=space, oracle=_oracle,
-                     signature_fn=signature_fn, cache=cache)
+    """Deprecated pre-registry constructor (fresh, unshared instance)."""
+    warnings.warn("ssd.pallas_ops.make() is deprecated; resolve the kernel "
+                  "via repro.core.registry.registry.get(pallas_ops.NAME) "
+                  "instead", DeprecationWarning, stacklevel=2)
+    return SPEC.instantiate(cache=cache)
 
 
-ssd_intra = make()
+ssd_intra = KernelHandle(NAME)   # late-binding: honors the active schedule_cache
 
 
 def ssd_chunked_pallas(x, dt, A, B, C, D, *, chunk: int = 64,
@@ -74,7 +101,9 @@ def ssd_chunked_pallas(x, dt, A, B, C, D, *, chunk: int = 64,
     la = dtr * A.astype(f32)[None, None, :]
     xb = xr * dtr[..., None]
 
-    y_diag = ssd_intra(xb, la, Br, Cr).reshape(bt, nc, chunk, h, p)
+    # resolved through the registry at call time so an active schedule_cache
+    # scope (serving with a persistent tuned store) is honored
+    y_diag = registry.get(NAME)(xb, la, Br, Cr).reshape(bt, nc, chunk, h, p)
 
     # states + inter-chunk recurrence (identical to ops.ssd_chunked)
     la_b = la.reshape(bt, nc, chunk, h)

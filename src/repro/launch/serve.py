@@ -2,16 +2,23 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
         --batch 4 --prompt-len 32 --new-tokens 32
+
+With ``--use-pallas --sip-cache PATH`` the model's kernel paths resolve
+SIP-tuned schedules from the store ``repro.launch.tune`` persisted (via the
+registry's contextvar-scoped ``schedule_cache``).
 """
 
 from __future__ import annotations
 
 import argparse
+import contextlib
+import dataclasses
 
 import jax
 import numpy as np
 
 from repro import configs
+from repro.core.registry import schedule_cache
 from repro.models import model as M
 from repro.models import modules as nn
 from repro.serve.engine import Engine, ServeConfig
@@ -25,9 +32,16 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route fwd-only paths through SIP-tuned kernels")
+    ap.add_argument("--sip-cache", default=None,
+                    help="tuned-schedule store to serve from (see "
+                         "repro.launch.tune)")
     args = ap.parse_args()
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
+    if args.use_pallas:
+        cfg = dataclasses.replace(cfg, use_pallas=True)
     params = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
     eng = Engine(params, cfg,
                  ServeConfig(max_len=args.prompt_len + args.new_tokens,
@@ -43,7 +57,12 @@ def main() -> None:
         # VLM: prompt is precomputed patch+text embeddings (frontend stub)
         extra = {"embeds": rng.standard_normal(
             (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32)}
-    out = eng.generate(prompts, args.new_tokens, extra_inputs=extra)
+    # kernel resolution happens at trace time (first generate), so the cache
+    # scope must wrap generation, not engine construction
+    scope = (schedule_cache(args.sip_cache) if args.sip_cache
+             else contextlib.nullcontext())
+    with scope:
+        out = eng.generate(prompts, args.new_tokens, extra_inputs=extra)
     print(f"[serve] generated {out.shape} tokens; "
           f"prefill {eng.stats['prefill_s']:.2f}s, "
           f"decode {eng.stats['decode_s']:.2f}s "

@@ -1,70 +1,65 @@
-"""Offline SIP search driver (paper §4.1's deployment workflow).
+"""Offline SIP search driver over the kernel registry (paper §4.1).
 
-Tunes every registered kernel for a set of deployment shapes and persists
-the best test-passing schedules to a cache file that training/serving then
-load with zero runtime overhead:
+Fully generic: every kernel declares its own deployment workloads next to
+its integration module, so this driver contains zero per-kernel code —
+adding a kernel (or a deployment shape) never touches this file.
 
+    PYTHONPATH=src python -m repro.launch.tune --list
     PYTHONPATH=src python -m repro.launch.tune --cache /tmp/sip_cache.json \
-        --rounds 2 --kernel gemm --kernel attention
+        --rounds 2 --kernel gemm_fused_leaky_relu --kernel flash_attention_causal
+    PYTHONPATH=src python -m repro.launch.tune --smoke      # CI gate
+
+Training/serving then activate the persisted store with
+``repro.core.schedule_cache(path)`` and resolve tuned kernels by name.
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
-import numpy as np
-
-from repro.core import ScheduleCache
+from repro import kernels
 from repro.core.jit import TuneConfig
+from repro.core.registry import registry
+from repro.tuning.session import TuningSession
 
 
-def tune_gemm(cache, cfg: TuneConfig, rng):
-    from repro.kernels.gemm_fused import ops
-    kern = ops.make(cache=cache)
-    for m, n, k in ((64, 64, 128), (128, 128, 256)):
-        x = rng.standard_normal((m, k)).astype(np.float32)
-        w = rng.standard_normal((k, n)).astype(np.float32)
-        kern.tune([x, w], cfg, verbose=True)
+def _print_listing() -> None:
+    for spec in registry.specs():
+        wls = ", ".join(f"{w.name}({'/'.join(w.suites)})"
+                        for w in spec.workloads) or "(no workloads)"
+        print(f"{spec.name}  [{spec.module}]")
+        print(f"    {wls}")
 
 
-def tune_attention(cache, cfg: TuneConfig, rng):
-    from repro.kernels.flash_attention import ops
-    kern = ops.make(causal=True, cache=cache)
-    for b, hq, hkv, s, d in ((1, 4, 2, 128, 32),):
-        q = rng.standard_normal((b, hq, s, d)).astype(np.float32)
-        k = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
-        v = rng.standard_normal((b, hkv, s, d)).astype(np.float32)
-        kern.tune([q, k, v], cfg, verbose=True)
+def _check_smoke_coverage() -> None:
+    """Every kernel package must contribute at least one smoke workload —
+    a kernel that cannot be smoke-tuned fails the build instead of silently
+    dropping out of CI."""
+    packages = {s.module.rsplit(".", 1)[0] for s in registry.specs()}
+    for pkg in sorted(packages):
+        specs = [s for s in registry.specs()
+                 if s.module.rsplit(".", 1)[0] == pkg]
+        if not any(s.workloads_in("smoke") for s in specs):
+            raise SystemExit(f"kernel package {pkg!r} declares no 'smoke' "
+                             f"workload; add one to its integration module")
 
 
-def tune_rmsnorm(cache, cfg: TuneConfig, rng):
-    from repro.kernels.rmsnorm import ops
-    kern = ops.make(cache=cache)
-    x = rng.standard_normal((64, 128)).astype(np.float32)
-    g = rng.standard_normal((128,)).astype(np.float32)
-    kern.tune([x, g], cfg, verbose=True)
-
-
-def tune_ssd(cache, cfg: TuneConfig, rng):
-    from repro.kernels.ssd import pallas_ops
-    kern = pallas_ops.make(cache=cache)
-    g, q, h, p, n = 4, 16, 4, 8, 16
-    xb = rng.standard_normal((g, q, h, p)).astype(np.float32)
-    la = -np.abs(rng.standard_normal((g, q, h))).astype(np.float32) * 0.1
-    B = rng.standard_normal((g, q, n)).astype(np.float32) * 0.3
-    C = rng.standard_normal((g, q, n)).astype(np.float32) * 0.3
-    kern.tune([xb, la, B, C], cfg, verbose=True)
-
-
-KERNELS = {"gemm": tune_gemm, "attention": tune_attention,
-           "rmsnorm": tune_rmsnorm, "ssd": tune_ssd}
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--list", action="store_true",
+                    help="list registered kernels + workload suites and exit")
     ap.add_argument("--cache", default="/tmp/sip_cache.json")
     ap.add_argument("--kernel", action="append", default=[],
-                    choices=list(KERNELS))
+                    help="registered kernel name (repeatable; default: all)")
+    ap.add_argument("--suite", default="default",
+                    help="workload suite to tune (default: 'default')")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI gate: 1 fast round over every registered "
+                         "kernel's tiny 'smoke' workload")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="session base seed (per-workload seeds derive from "
+                         "it, independent of kernel selection/order)")
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--cooling", type=float, default=1.05)
     ap.add_argument("--final-samples", type=int, default=64)
@@ -81,21 +76,43 @@ def main() -> None:
     ap.add_argument("--no-memoize", action="store_true",
                     help="disable the shared energy cache (re-evaluate "
                          "revisited schedules)")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
-    cache = ScheduleCache(args.cache)
+    kernels.load_all()
+    if args.list:
+        _print_listing()
+        return 0
+
+    suite = args.suite
     cfg = TuneConfig(rounds=args.rounds, cooling=args.cooling,
-                     final_samples=args.final_samples,
-                     step_samples=1,
-                     guided=args.guided, greed=args.greed,
+                     final_samples=args.final_samples, step_samples=1,
+                     seed=args.seed, guided=args.guided, greed=args.greed,
                      chains=args.chains, exchange_every=args.exchange_every,
                      memoize=not args.no_memoize)
-    rng = np.random.default_rng(0)
-    for name in (args.kernel or list(KERNELS)):
-        print(f"[tune] {name}")
-        KERNELS[name](cache, cfg, rng)
-    print(f"[tune] schedules persisted to {args.cache}")
+    if args.smoke:
+        suite = "smoke"
+        # the CI gate pins the budget knobs (fast, fixed cost) but keeps
+        # every other flag the user wired in
+        cfg = dataclasses.replace(cfg, rounds=1, t_min=0.3, cooling=1.3,
+                                  final_samples=4)
+        _check_smoke_coverage()
+
+    for name in args.kernel:
+        if name not in registry:
+            ap.error(f"unknown kernel {name!r}; registered: "
+                     f"{', '.join(registry.names())}")
+
+    # pass the path, not a ScheduleCache: the session interns it, so an
+    # in-process schedule_cache(args.cache) scope shares the same store
+    session = TuningSession(cache=args.cache, config=cfg)
+    runs = session.run(kernels=args.kernel or None, suite=suite, verbose=True)
+    if not runs:
+        raise SystemExit(f"no {suite!r} workloads matched "
+                         f"{args.kernel or 'any registered kernel'}")
+    print(f"[tune] {len(runs)} workload(s) tuned; schedules persisted to "
+          f"{args.cache}")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

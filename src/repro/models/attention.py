@@ -220,10 +220,12 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def _pallas_sdpa(q, k, v, *, causal, window):
     """SIP-tuned Pallas kernel path (forward-only).  Layout: kernels expect
-    (B, H, S, D)."""
+    (B, H, S, D).  The kernel is the ONE registry-cached instance for this
+    variant (bound to the active schedule_cache), so repeated calls reuse
+    its schedule/build caches instead of recompiling from scratch."""
     qt = jnp.swapaxes(q, 1, 2)
     kt = jnp.swapaxes(k, 1, 2)
     vt = jnp.swapaxes(v, 1, 2)
-    kern = fa_ops.make(causal=causal, window=window)
+    kern = fa_ops.kernel(causal=causal, window=window)
     o = kern(qt, kt, vt)
     return jnp.swapaxes(o, 1, 2)

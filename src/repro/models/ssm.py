@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.dist.partition import shard
 from repro.kernels.ssd import ops as ssd_ops
+from repro.kernels.ssd import pallas_ops as ssd_pallas
 from repro.models import modules as nn
 from repro.models.config import ModelConfig
 
@@ -85,9 +86,16 @@ def mamba(p, x: jnp.ndarray, cfg: ModelConfig, *,
 
     init_ssd = state["ssd"] if state is not None else None
     chunk = cfg.ssm_chunk if s % cfg.ssm_chunk == 0 else _best_chunk(s)
-    y, ssd_state = ssd_ops.ssd_chunked(xs, dt_act, A, B, C, p["D"],
-                                       chunk=chunk, init_state=init_ssd,
-                                       return_state=True)
+    # prefill: the SIP-tuned Pallas intra-chunk kernel (resolved via the
+    # registry, honoring an active schedule_cache).  Forward-only, like the
+    # attention pallas path — pallas_call is not differentiable, so training
+    # must keep cfg.use_pallas False (only serve.py sets it).  Decode
+    # continuation stays on jnp (S=1 steps don't amortize a kernel launch).
+    ssd_fn = (ssd_pallas.ssd_chunked_pallas
+              if cfg.use_pallas and state is None else ssd_ops.ssd_chunked)
+    y, ssd_state = ssd_fn(xs, dt_act, A, B, C, p["D"],
+                          chunk=chunk, init_state=init_ssd,
+                          return_state=True)
     y = y.reshape(bt, s, di).astype(dt_)
     y = nn.rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
     out = y @ p["out_proj"].astype(dt_)

@@ -1,0 +1,5 @@
+"""Multi-kernel, multi-workload tuning sessions over the kernel registry."""
+
+from repro.tuning.session import TuningSession, WorkloadRun
+
+__all__ = ["TuningSession", "WorkloadRun"]

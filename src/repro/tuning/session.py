@@ -1,0 +1,103 @@
+"""TuningSession — the offline search orchestrator (paper §4.1 at fleet scale).
+
+The paper runs SIP offline per kernel; production needs the search to run
+uniformly over *many* kernels and deployment shapes.  A session iterates the
+registry's declarative :class:`~repro.core.registry.Workload` suites,
+derives a stable per-(kernel, workload) seed (tuning a subset, or
+reordering, never changes another workload's inputs or trajectory), and
+persists every result into ONE :class:`~repro.core.cache.ScheduleCache` that
+deployment then activates via ``schedule_cache``.
+
+With ``chains=1`` a session workload is bit-identical to calling
+``SipKernel.tune`` directly with the same seed — the session adds
+orchestration, not search behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core.cache import ScheduleCache
+from repro.core.jit import TuneConfig
+from repro.core.registry import (KernelRegistry, Workload, cache_for_path,
+                                 registry, workload_seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadRun:
+    """Outcome of tuning one (kernel, workload) pair."""
+
+    kernel: str
+    workload: str
+    signature: str                 # SipKernel.sig_str of the example args
+    seed: int                      # workload_seed(kernel, workload, base)
+    results: tuple[Any, ...]       # AnnealResult per round
+    best_energy: float
+
+    @property
+    def improvement(self) -> float:
+        return max(r.improvement for r in self.results)
+
+
+class TuningSession:
+    """Orchestrates offline SIP search over registered kernels.
+
+    ``cache`` is the single persistent store every tuned schedule lands in;
+    ``config`` is the shared search configuration (its ``seed`` is the
+    session base seed — each workload folds it into its own stable seed).
+    """
+
+    def __init__(self, cache: ScheduleCache | str | None = None,
+                 config: TuneConfig | None = None,
+                 registry_: KernelRegistry | None = None):
+        if isinstance(cache, str):
+            cache = cache_for_path(cache)   # interned: serving scopes over
+            #                                 the same path share this store
+        self.cache = cache if cache is not None else ScheduleCache()
+        self.config = (config if config is not None else TuneConfig()).validate()
+        self.registry = registry_ if registry_ is not None else registry
+        # session-local instance memo: workloads of one kernel share an
+        # instance (and its build caches) within the session, without
+        # pinning per-session instances in the process-wide registry forever
+        self._instances: dict[str, Any] = {}
+
+    def _kernel(self, name: str):
+        inst = self._instances.get(name)
+        if inst is None:
+            inst = self._instances[name] = \
+                self.registry.spec(name).instantiate(cache=self.cache)
+        return inst
+
+    def run(self, kernels: Sequence[str] | None = None,
+            suite: str = "default", verbose: bool = False) -> list[WorkloadRun]:
+        """Tune every workload of ``suite`` for ``kernels`` (default: every
+        registered kernel).  Unknown kernel names raise before any tuning."""
+        names = list(kernels) if kernels else self.registry.names()
+        plan: list[tuple[str, Workload]] = []
+        for name in names:
+            spec = self.registry.spec(name)      # raises on unknown kernel
+            wls = spec.workloads_in(suite)
+            if verbose and not wls:
+                print(f"[session] {name}: no {suite!r} workloads, skipping")
+            plan.extend((name, wl) for wl in wls)
+        return [self.run_workload(name, wl, verbose=verbose)
+                for name, wl in plan]
+
+    def run_workload(self, kernel: str, workload: Workload,
+                     verbose: bool = False) -> WorkloadRun:
+        """Tune one (kernel, workload) pair, seeded independently of every
+        other pair in the session."""
+        seed = workload_seed(kernel, workload.name, self.config.seed)
+        args = list(workload.make_args(np.random.default_rng(seed)))
+        kern = self._kernel(kernel)
+        if verbose:
+            print(f"[session] {kernel} · {workload.name} (seed={seed})")
+        results = kern.tune(args, dataclasses.replace(self.config, seed=seed),
+                            verbose=verbose)
+        return WorkloadRun(kernel=kernel, workload=workload.name,
+                           signature=kern.sig_str(kern.static_of(*args)),
+                           seed=seed, results=tuple(results),
+                           best_energy=min(r.best_raw for r in results))

@@ -110,13 +110,17 @@ class TestGuidedFlagWiring:
     def test_cli_guided_flag_reaches_tune_config(self, monkeypatch, tmp_path):
         from repro.launch import tune
         seen = {}
-        monkeypatch.setattr(
-            tune, "KERNELS",
-            {"fake": lambda cache, cfg, rng: seen.__setitem__("cfg", cfg)})
-        base = ["tune", "--cache", str(tmp_path / "c.json"), "--kernel", "fake"]
-        monkeypatch.setattr(sys, "argv", base + ["--guided", "--greed", "0.9"])
-        tune.main()
+
+        class FakeSession:
+            def __init__(self, cache=None, config=None):
+                seen["cfg"] = config
+
+            def run(self, kernels=None, suite="default", verbose=False):
+                return [object()]
+
+        monkeypatch.setattr(tune, "TuningSession", FakeSession)
+        base = ["--cache", str(tmp_path / "c.json")]
+        tune.main(base + ["--guided", "--greed", "0.9"])
         assert seen["cfg"].guided is True and seen["cfg"].greed == 0.9
-        monkeypatch.setattr(sys, "argv", base)
-        tune.main()
+        tune.main(base)
         assert seen["cfg"].guided is False

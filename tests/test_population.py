@@ -287,17 +287,20 @@ class TestTuneIntegration:
         from repro.launch import tune
 
         seen = {}
-        monkeypatch.setattr(
-            tune, "KERNELS",
-            {"fake": lambda cache, cfg, rng: seen.__setitem__("cfg", cfg)})
-        base = ["tune", "--cache", str(tmp_path / "c.json"), "--kernel", "fake"]
-        monkeypatch.setattr(sys, "argv",
-                            base + ["--chains", "4", "--exchange-every", "8",
-                                    "--no-memoize"])
-        tune.main()
+
+        class FakeSession:
+            def __init__(self, cache=None, config=None):
+                seen["cfg"] = config
+
+            def run(self, kernels=None, suite="default", verbose=False):
+                return [object()]
+
+        monkeypatch.setattr(tune, "TuningSession", FakeSession)
+        base = ["--cache", str(tmp_path / "c.json")]
+        tune.main(base + ["--chains", "4", "--exchange-every", "8",
+                          "--no-memoize"])
         assert seen["cfg"].chains == 4
         assert seen["cfg"].exchange_every == 8
         assert seen["cfg"].memoize is False
-        monkeypatch.setattr(sys, "argv", base)
-        tune.main()
+        tune.main(base)
         assert seen["cfg"].chains == 1 and seen["cfg"].memoize is True

@@ -1,0 +1,410 @@
+"""KernelSpec registry + TuningSession: declarative kernel integration.
+
+Covers the registry surface (registration, duplicate/unknown errors, shared
+instance resolution under schedule_cache scopes), the session orchestrator
+(one cache for many kernels, per-workload seeding that is selection- and
+order-independent, chains=1 bit-equivalence with direct SipKernel.tune),
+TuneConfig.validate, the generic CLI driver, and the registry-routed model
+paths (attention / SSD-pallas kernel reuse)."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import kernels
+from repro.core import (KernelRegistry, KernelSpec, ScheduleCache, TuneConfig,
+                        Workload, active_schedule_cache, registry,
+                        schedule_cache, sip_kernel, workload_seed)
+from repro.core.schedule import SearchSpace
+from repro.tuning import TuningSession
+
+kernels.load_all()
+
+GEMM = "gemm_fused_leaky_relu"
+RMS = "rmsnorm_fused"
+QUICK = TuneConfig(rounds=1, t_min=0.3, cooling=1.3, step_samples=1,
+                   final_samples=4)
+
+
+def _toy_spec(name="toy"):
+    return KernelSpec(name=name, build=lambda s, **st: (lambda *a: a),
+                      program_for=lambda s, **st: None,
+                      space_for=lambda **st: SearchSpace(),
+                      oracle=lambda *a: a,
+                      signature_fn=lambda *a: {})
+
+
+class TestRegistry:
+    def test_duplicate_name_rejected(self):
+        reg = KernelRegistry()
+        reg.register(_toy_spec())
+        with pytest.raises(ValueError, match="already registered"):
+            reg.register(_toy_spec())
+
+    def test_unknown_kernel_lists_registered(self):
+        reg = KernelRegistry()
+        reg.register(_toy_spec("present"))
+        with pytest.raises(KeyError, match="present"):
+            reg.spec("absent")
+        with pytest.raises(KeyError, match="unknown kernel"):
+            reg.get("absent")
+
+    def test_decorator_registers_and_fills_module(self):
+        reg = KernelRegistry()
+
+        @sip_kernel(name="decorated", program_for=lambda s, **st: None,
+                    space_for=lambda **st: SearchSpace(),
+                    oracle=lambda *a: a, signature_fn=lambda *a: {},
+                    workloads=[Workload("w", lambda rng: [],
+                                        suites=("smoke",))],
+                    registry_=reg)
+        def build(schedule, **static):
+            return lambda *a: a
+
+        assert isinstance(build, KernelSpec)       # decorator returns the spec
+        assert "decorated" in reg
+        assert build.module == __name__
+        assert [w.name for w in build.workloads_in("smoke")] == ["w"]
+        assert build.workloads_in("default") == ()
+
+    def test_get_memoizes_per_cache(self, tmp_path):
+        a = registry.get(GEMM)
+        assert registry.get(GEMM) is a             # default cache: one object
+        with schedule_cache(str(tmp_path / "c.json")) as cache:
+            b = registry.get(GEMM)
+            assert b is not a and b.cache is cache
+            assert registry.get(GEMM) is b         # memoized within the scope
+        assert registry.get(GEMM) is a             # scope exit restores
+
+    def test_schedule_cache_path_interning(self, tmp_path):
+        """Re-entering a path scope (a server wrapping every request) must
+        resolve the SAME store — and the same memoized kernel instance —
+        not re-read the JSON and mint fresh instances per scope."""
+        p = str(tmp_path / "store.json")
+        with schedule_cache(p) as c1:
+            k1 = registry.get(GEMM)
+        with schedule_cache(p) as c2:
+            k2 = registry.get(GEMM)
+        assert c2 is c1 and k2 is k1
+        # a session over the same path shares the interned store too
+        assert TuningSession(cache=p).cache is c1
+
+    def test_spec_call_dispatches_through_owning_registry(self):
+        """A spec registered into a custom registry must not consult the
+        process-wide one when called."""
+        reg = KernelRegistry()
+        spec = sip_kernel(name="owned_only", program_for=lambda s, **st: None,
+                          space_for=lambda **st: SearchSpace(),
+                          oracle=lambda *a: a, signature_fn=lambda *a: {},
+                          registry_=reg)(
+            lambda schedule, **st: (lambda *a: ("owned", a)))
+        assert spec.owner is reg
+        assert "owned_only" not in registry
+        assert spec(5) == ("owned", (5,))
+        assert reg.instance_count() == 1
+
+    def test_concurrent_variant_first_use(self):
+        """Concurrent first use of a lazily-registered attention variant
+        must race-safely resolve ONE shared instance (no duplicate-name
+        ValueError from check-then-register)."""
+        import threading
+        from repro.kernels.flash_attention import ops as fa_ops
+        results, errors = [], []
+        barrier = threading.Barrier(4)
+
+        def resolve():
+            try:
+                barrier.wait()
+                results.append(fa_ops.kernel(causal=True, window=48))
+            except Exception as exc:          # noqa: BLE001
+                errors.append(exc)
+
+        threads = [threading.Thread(target=resolve) for _ in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert len({id(k) for k in results}) == 1
+
+    def test_module_singletons_are_late_binding(self, tmp_path):
+        """Exported handles (gemm_leaky_relu, rmsnorm, ...) must resolve the
+        instance for the schedule_cache scope active at USE time, not the
+        one current when the module was imported."""
+        from repro.kernels.gemm_fused import ops as gemm_ops
+        default_cache = registry.get(GEMM).cache
+        with schedule_cache(str(tmp_path / "late.json")) as cache:
+            assert gemm_ops.gemm_leaky_relu.cache is cache
+        assert gemm_ops.gemm_leaky_relu.cache is default_cache
+        x = np.ones((16, 32), np.float32)
+        w = np.ones((32, 16), np.float32)
+        assert gemm_ops.gemm_leaky_relu(x, w).shape == (16, 16)
+
+    def test_schedule_cache_scoping(self):
+        assert active_schedule_cache() is None
+        outer, inner = ScheduleCache(), ScheduleCache()
+        with schedule_cache(outer):
+            assert active_schedule_cache() is outer
+            with schedule_cache(inner):            # reentrant; innermost wins
+                assert active_schedule_cache() is inner
+            assert active_schedule_cache() is outer
+        assert active_schedule_cache() is None
+
+    def test_load_all_idempotent_and_complete(self):
+        names = kernels.load_all()
+        assert kernels.load_all() == names
+        for expected in (GEMM, RMS, "flash_attention_causal",
+                         "ssd_intra_chunk"):
+            assert expected in names
+
+
+class TestTuneConfigValidate:
+    def test_valid_default_passes(self):
+        assert TuneConfig().validate() is not None
+
+    @pytest.mark.parametrize("bad", [
+        dict(rounds=0), dict(step_samples=-1), dict(chains=0),
+        dict(t_min=1.0, t_max=1.0), dict(t_min=2.0), dict(ladder=0.0),
+        dict(energy="nope"),
+    ])
+    def test_rejections(self, bad):
+        with pytest.raises(ValueError):
+            TuneConfig(**bad).validate()
+
+    def test_sip_kernel_tune_validates_before_work(self):
+        kern = registry.spec(RMS).instantiate()
+        x = np.zeros((16, 32), np.float32)
+        g = np.zeros((32,), np.float32)
+        with pytest.raises(ValueError, match="chains"):
+            kern.tune([x, g], TuneConfig(chains=0))
+
+    def test_session_validates_on_construction(self):
+        with pytest.raises(ValueError, match="energy"):
+            TuningSession(config=TuneConfig(energy="nope"))
+
+
+class TestWorkloadSeeding:
+    def test_seed_is_stable_and_distinct(self):
+        s = workload_seed(GEMM, "smoke_16x16x32")
+        assert s == workload_seed(GEMM, "smoke_16x16x32")
+        assert s != workload_seed(RMS, "smoke_16x16x32")
+        assert s != workload_seed(GEMM, "other")
+        assert s != workload_seed(GEMM, "smoke_16x16x32", base=1)
+
+    def test_results_independent_of_kernel_selection(self, tmp_path):
+        """Tuning rmsnorm alone and tuning it after gemm must produce
+        IDENTICAL rmsnorm entries — the pre-redesign launcher threaded one
+        shared rng through all kernels, so selection changed every input."""
+        def rms_entries(path, selection):
+            cache = ScheduleCache(str(path))
+            TuningSession(cache=cache, config=QUICK).run(
+                kernels=selection, suite="smoke")
+            spec = registry.spec(RMS)
+            wl = spec.workloads_in("smoke")[0]
+            args = wl.make_args(np.random.default_rng(
+                workload_seed(RMS, wl.name, QUICK.seed)))
+            kern = spec.instantiate()
+            sig = kern.sig_str(kern.static_of(*args))
+            return [(e.schedule_json, e.energy)
+                    for e in cache.entries(RMS, sig)]
+
+        alone = rms_entries(tmp_path / "alone.json", [RMS])
+        after_gemm = rms_entries(tmp_path / "both.json", [GEMM, RMS])
+        assert alone and alone == after_gemm
+
+
+class TestTuningSession:
+    def test_two_kernels_one_cache_end_to_end(self, tmp_path):
+        path = tmp_path / "cache.json"
+        cache = ScheduleCache(str(path))
+        runs = TuningSession(cache=cache, config=QUICK).run(
+            kernels=[GEMM, RMS], suite="smoke", verbose=False)
+        assert {r.kernel for r in runs} == {GEMM, RMS}
+        persisted = json.loads(path.read_text())
+        assert {k.split("::", 1)[0] for k in persisted} == {GEMM, RMS}
+        # deployment resolves the tuned schedules from the same store
+        with schedule_cache(str(path)):
+            for run in runs:
+                kern = registry.get(run.kernel)
+                static = json.loads(run.signature)
+                assert kern.cache.best(run.kernel, run.signature) is not None
+                assert kern.schedule_for(static) is not None
+
+    def test_session_does_not_pin_global_instances(self, tmp_path):
+        """Sessions use a session-local instance memo, so repeated sessions
+        (each with its own cache) must not grow registry._instances."""
+        before = registry.instance_count()
+        TuningSession(cache=str(tmp_path / "c.json"), config=QUICK).run(
+            kernels=[RMS], suite="smoke")
+        assert registry.instance_count() == before
+
+    def test_windowed_variant_declared_workload_is_tunable(self, tmp_path):
+        """register_variant(causal, window, workloads=...) makes a sliding-
+        window variant offline-tunable — the declaration lives next to the
+        kernel, and the generic driver picks it up by name."""
+        from repro.kernels.flash_attention import ops as fa_ops
+        spec = fa_ops.register_variant(True, 12, workloads=(
+            Workload("smoke_w12", fa_ops._attn_args(1, 2, 2, 16, 8),
+                     suites=("smoke",)),))
+        runs = TuningSession(cache=str(tmp_path / "w.json"),
+                             config=QUICK).run(kernels=[spec.name],
+                                               suite="smoke")
+        assert len(runs) == 1 and runs[0].kernel == "flash_attention_causal_w12"
+
+    def test_tuning_invalidates_shared_instance_resolution(self, tmp_path):
+        """A signature resolved (and memoized) on the shared serving
+        instance BEFORE tuning must re-resolve to the tuned schedule after a
+        session tunes into the same store through its own instance."""
+        path = str(tmp_path / "coherent.json")
+        spec = registry.spec(RMS)
+        wl = spec.workloads_in("smoke")[0]
+        args = list(wl.make_args(np.random.default_rng(0)))
+        with schedule_cache(path) as cache:
+            shared = registry.get(RMS)
+            shared(*args)                  # memoizes the default resolution
+            TuningSession(cache=path, config=QUICK).run(
+                kernels=[RMS], suite="smoke")
+            static = shared.static_of(*args)
+            sig = shared.sig_str(static)
+            tuned = cache.best(RMS, sig)
+            assert tuned is not None
+            shared(*args)                  # store version bumped: re-resolves
+            assert shared._resolved[sig] is \
+                shared._built[(sig, tuned.signature())]
+
+    def test_instance_memo_is_bounded(self):
+        """Fresh instance-form caches must not grow registry._instances
+        without bound (each entry pins compiled builds + a store)."""
+        for _ in range(70):
+            registry.get(RMS, cache=ScheduleCache())
+        assert registry.instance_count() <= 64
+
+    def test_unknown_kernel_raises_before_tuning(self, tmp_path):
+        sess = TuningSession(cache=str(tmp_path / "c.json"), config=QUICK)
+        with pytest.raises(KeyError, match="unknown kernel"):
+            sess.run(kernels=["nope"], suite="smoke")
+
+    def test_chains1_bit_equivalent_to_direct_tune(self, tmp_path):
+        """The session adds orchestration, not search behavior: a chains=1
+        session workload reproduces direct SipKernel.tune bit-for-bit."""
+        spec = registry.spec(GEMM)
+        wl = spec.workloads_in("smoke")[0]
+        run = TuningSession(cache=str(tmp_path / "s.json"),
+                            config=QUICK).run_workload(GEMM, wl)
+
+        seed = workload_seed(GEMM, wl.name, QUICK.seed)
+        args = list(wl.make_args(np.random.default_rng(seed)))
+        kern = spec.instantiate(cache=ScheduleCache(str(tmp_path / "d.json")))
+        direct = kern.tune(args, dataclasses.replace(QUICK, seed=seed))
+
+        assert len(run.results) == len(direct)
+        for got, want in zip(run.results, direct):
+            assert got.best.signature() == want.best.signature()
+            assert got.best_raw == want.best_raw            # exact, not close
+            assert got.initial_raw == want.initial_raw
+
+
+class TestTuneCLI:
+    def test_list_prints_registry(self, capsys):
+        from repro.launch import tune
+        assert tune.main(["--list"]) == 0
+        out = capsys.readouterr().out
+        for name in (GEMM, RMS, "flash_attention_causal", "ssd_intra_chunk"):
+            assert name in out
+        assert "smoke" in out and "default" in out
+
+    def test_unknown_kernel_errors(self, capsys, tmp_path):
+        from repro.launch import tune
+        with pytest.raises(SystemExit):
+            tune.main(["--kernel", "nope",
+                       "--cache", str(tmp_path / "c.json")])
+
+    def test_smoke_forwards_guided_flags(self, monkeypatch, tmp_path):
+        """--smoke rebuilds the config for the CI gate but must not silently
+        drop --guided/--greed (the parsed-and-dropped bug class)."""
+        from repro.launch import tune
+        seen = {}
+
+        class FakeSession:
+            def __init__(self, cache=None, config=None):
+                seen["cfg"] = config
+
+            def run(self, kernels=None, suite="default", verbose=False):
+                seen["suite"] = suite
+                return [object()]
+
+        monkeypatch.setattr(tune, "TuningSession", FakeSession)
+        assert tune.main(["--smoke", "--guided", "--greed", "0.9",
+                          "--cache", str(tmp_path / "c.json")]) == 0
+        assert seen["cfg"].guided is True and seen["cfg"].greed == 0.9
+        assert seen["suite"] == "smoke" and seen["cfg"].rounds == 1
+
+    def test_smoke_single_kernel_run(self, tmp_path, capsys):
+        from repro.launch import tune
+        path = tmp_path / "smoke.json"
+        assert tune.main(["--smoke", "--kernel", RMS,
+                          "--cache", str(path)]) == 0
+        assert "persisted" in capsys.readouterr().out
+        persisted = json.loads(path.read_text())
+        assert all(k.startswith(f"{RMS}::") for k in persisted) and persisted
+
+
+class TestModelPathsUseRegistry:
+    def test_attention_variant_resolves_one_instance(self):
+        from repro.kernels.flash_attention import ops as fa_ops
+        k1 = fa_ops.kernel(causal=True, window=None)
+        assert fa_ops.kernel(causal=True, window=None) is k1
+        # lazily-registered variant is cached too
+        w1 = fa_ops.kernel(causal=True, window=8)
+        assert fa_ops.kernel(causal=True, window=8) is w1
+        assert w1 is not k1
+
+    def test_model_attention_reuses_kernel_object(self):
+        """Regression: the model path used to construct a fresh SipKernel
+        (+ fresh ScheduleCache and build caches) on EVERY pallas call."""
+        from repro.models import attention as attn
+        from repro.models.config import ModelConfig
+        from repro.models import modules as nn
+        cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                          n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                          use_pallas=True)
+        p = nn.unwrap(attn.init_attention(jax.random.PRNGKey(0), cfg))
+        x = jnp.asarray(np.random.default_rng(0).standard_normal(
+            (1, 16, 32)), jnp.float32)
+        o1 = attn.attention(p, x, cfg)
+        count = registry.instance_count()
+        o2 = attn.attention(p, x, cfg)
+        assert registry.instance_count() == count   # no new instances
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+
+    def test_mamba_pallas_routing_matches_jnp(self):
+        from repro.models import modules as nn
+        from repro.models import ssm
+        from repro.models.config import ModelConfig
+        cfg = ModelConfig(name="m", family="ssm", n_layers=1, d_model=16,
+                          n_heads=1, n_kv_heads=1, d_ff=32, vocab=64,
+                          ssm_state=8, ssm_headdim=4, ssm_chunk=8)
+        p = nn.unwrap(ssm.init_mamba(jax.random.PRNGKey(0), cfg))
+        x = jnp.asarray(np.random.default_rng(1).standard_normal(
+            (2, 16, 16)) * 0.1, jnp.float32)
+        ref = ssm.mamba(p, x, cfg)
+        got = ssm.mamba(p, x, dataclasses.replace(cfg, use_pallas=True))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestDeprecationShims:
+    def test_ops_make_warns_but_works(self):
+        from repro.kernels.gemm_fused import ops as gemm_ops
+        from repro.kernels.flash_attention import ops as fa_ops
+        with pytest.warns(DeprecationWarning):
+            kern = gemm_ops.make()
+        assert kern is not registry.get(GEMM)      # unshared, as before
+        assert kern.name == GEMM
+        with pytest.warns(DeprecationWarning):
+            fa = fa_ops.make(causal=True)
+        assert fa.name == "flash_attention_causal"
