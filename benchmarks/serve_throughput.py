@@ -1,0 +1,186 @@
+"""Serving throughput: continuous batching vs the static-batch baseline.
+
+Mixed-length traffic (uniform prompt lengths and decode budgets) is where
+continuous batching earns its keep: the static engine pads every prompt in a
+batch to the longest and decodes the whole batch to the largest token budget,
+so short requests burn slots as padding; the continuous engine refills each
+slot the moment its request finishes.  Both engines run the SAME request
+stream at the SAME slot capacity, timed after a warmup pass so jit compiles
+are excluded (steady-state serving, the regime the ROADMAP north-star cares
+about).
+
+Also re-verifies the engine's correctness contract per run: greedy outputs
+must be token-identical to single-request ``Engine.generate`` for every
+request across 3 arrival orderings (submit order, reversed, shuffled).
+
+``python benchmarks/serve_throughput.py`` writes ``BENCH_serve.json``;
+``--smoke`` shrinks the model and stream for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+CAPACITY = 8
+
+
+def _model(full: bool):
+    import jax
+    from repro.models import model as M
+    from repro.models import modules as nn
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig(
+        name="serve-bench", family="dense", vocab=1024, dtype="float32",
+        **(dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, d_ff=512)
+           if full else
+           dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128)),
+    ).validate()
+    params = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+    return params, cfg
+
+
+def _traffic(full: bool, rng: np.random.Generator, vocab: int):
+    n = 32 if full else 10
+    # bucketed prompt lengths: realistic mixed traffic, bounded prefill
+    # retraces for both engines; decode budgets spread wide — the straggler
+    # effect static batching pays for
+    lens = (8, 16, 24, 32) if full else (4, 8, 12)
+    new_lo, new_hi = (8, 48) if full else (3, 8)
+    prompts = [rng.integers(0, vocab, int(rng.choice(lens))).astype(np.int32)
+               for _ in range(n)]
+    budgets = [int(rng.integers(new_lo, new_hi + 1)) for _ in range(n)]
+    return prompts, budgets
+
+
+REPS = 3        # timed repetitions; best-of-N suppresses machine noise
+
+
+def _run_continuous(params, cfg, scfg, prompts, budgets):
+    from repro.serve.engine import ContinuousEngine
+    eng = ContinuousEngine(params, cfg, scfg)
+    wall = float("inf")
+    for rep in range(1 + REPS):             # pass 0 warms jit caches
+        for p, n in zip(prompts, budgets):
+            eng.submit(p, n)
+        t0 = time.perf_counter()
+        eng.run(max_steps=100_000)
+        if rep == 0:
+            eng.reset_stats()   # metrics describe the timed (warm) passes
+        else:
+            wall = min(wall, time.perf_counter() - t0)
+    toks = sum(budgets)
+    m = eng.metrics()
+    return {"wall_s": round(wall, 3), "useful_tokens": toks,
+            "tokens_per_s": round(toks / wall, 1),
+            "mean_occupancy": round(m["mean_occupancy"], 2),
+            "prefill_frac": round(m["prefill_frac"], 3),
+            "prefill_compiles": eng.stats["prefill_compiles"]}
+
+
+def _run_static(params, cfg, scfg, prompts, budgets):
+    from repro.serve.engine import Engine, static_batches
+    eng = Engine(params, cfg, scfg)
+    wall = float("inf")
+    for rep in range(1 + REPS):             # pass 0 warms jit caches
+        t0 = time.perf_counter()
+        decoded = 0
+        for padded, new, idxs in static_batches(prompts, budgets,
+                                                scfg.capacity):
+            decoded += new * len(idxs)
+            eng.generate(padded, new)
+        if rep > 0:
+            wall = min(wall, time.perf_counter() - t0)
+    toks = sum(budgets)
+    return {"wall_s": round(wall, 3), "useful_tokens": toks,
+            "decoded_tokens": decoded,
+            "tokens_per_s": round(toks / wall, 1),
+            "decode_waste": round(1 - toks / decoded, 3)}
+
+
+def _differential(params, cfg, scfg, prompts, budgets) -> dict:
+    """Greedy token-identity vs single-request generate, 3 arrival orders."""
+    from repro.serve.engine import ContinuousEngine, Engine
+    ref = Engine(params, cfg, scfg)
+    want = [ref.generate(p[None], n)[0] for p, n in zip(prompts, budgets)]
+    rng = np.random.default_rng(7)
+    orders = [list(range(len(prompts))),
+              list(range(len(prompts)))[::-1],
+              list(rng.permutation(len(prompts)))]
+    identical = 0
+    for order in orders:
+        eng = ContinuousEngine(params, cfg, scfg)
+        handles = {j: eng.submit(prompts[j], budgets[j]) for j in order}
+        out = eng.run(max_steps=100_000)
+        if all(np.array_equal(out[handles[j].uid], want[j])
+               for j in range(len(prompts))):
+            identical += 1
+    return {"orderings": len(orders), "identical": identical,
+            "token_identical": identical == len(orders)}
+
+
+def bench(full: bool = True) -> dict:
+    from repro.serve.engine import ServeConfig
+    params, cfg = _model(full)
+    rng = np.random.default_rng(0)
+    prompts, budgets = _traffic(full, rng, cfg.vocab)
+    scfg = ServeConfig(max_len=max(len(p) for p in prompts) + max(budgets),
+                       capacity=CAPACITY if full else 4)
+    # differential first (small subset in full mode keeps the reference pass
+    # cheap without weakening the orderings check)
+    k = 12 if full else len(prompts)
+    diff = _differential(params, cfg, scfg, prompts[:k], budgets[:k])
+    cont = _run_continuous(params, cfg, scfg, prompts, budgets)
+    stat = _run_static(params, cfg, scfg, prompts, budgets)
+    return {
+        "config": {"mode": "full" if full else "smoke",
+                   "capacity": scfg.capacity, "requests": len(prompts),
+                   "model": cfg.name, "max_len": scfg.max_len},
+        "continuous": cont, "static": stat, "differential": diff,
+        "speedup_tokens_per_s": round(cont["tokens_per_s"]
+                                      / stat["tokens_per_s"], 2),
+    }
+
+
+def run(full: bool = True):
+    """benchmarks.run harness entry — CSV rows."""
+    res = bench(full)
+    if not res["differential"]["token_identical"]:
+        raise AssertionError(
+            f"continuous engine diverged from single-request generation "
+            f"({res['differential']['identical']}/"
+            f"{res['differential']['orderings']} orderings identical)")
+    return [("serve/continuous_vs_static_speedup",
+             res["speedup_tokens_per_s"],
+             f"cont={res['continuous']['tokens_per_s']}tok/s "
+             f"static={res['static']['tokens_per_s']}tok/s "
+             f"occupancy={res['continuous']['mean_occupancy']} "
+             f"decode_waste={res['static']['decode_waste']:.0%} "
+             f"diff_identical={res['differential']['token_identical']}")]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + short stream (CI)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+    res = bench(full=not args.smoke)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"continuous {res['continuous']['tokens_per_s']} tok/s vs "
+          f"static {res['static']['tokens_per_s']} tok/s "
+          f"({res['speedup_tokens_per_s']}x), differential "
+          f"{res['differential']['identical']}/"
+          f"{res['differential']['orderings']} orderings identical")
+    print(f"wrote {args.out}")
+    if not res["differential"]["token_identical"]:
+        raise SystemExit("differential correctness check FAILED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,13 @@
-"""Serve a small LM with batched requests through the production engine.
+"""Serve a small LM under continuous batching with streaming output.
 
     PYTHONPATH=src python examples/serve_lm.py
 
-Demonstrates: batched prefill -> greedy decode with a preallocated KV cache,
-per-request EOS handling, throughput stats, and (via --use-pallas) routing
-the prefill through the SIP-tunable Pallas flash-attention kernel.
+Demonstrates: a FIFO request queue over fixed-capacity decode slots,
+prefill-on-arrival at each request's exact prompt length, per-request stop
+budgets, streaming token emission, and the engine's queue/occupancy metrics.
+``--static`` runs the same requests through the static-batch baseline engine
+for comparison; ``--use-pallas`` routes prefill through the SIP-tunable
+Pallas flash-attention kernel.
 """
 
 import argparse
@@ -16,7 +19,8 @@ import numpy as np
 from repro.models import model as M
 from repro.models import modules as nn
 from repro.models.config import ModelConfig
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import (ContinuousEngine, Engine, ServeConfig,
+                                static_batches)
 
 CFG = ModelConfig(
     name="serve-demo", family="dense", n_layers=4, d_model=256, n_heads=8,
@@ -26,30 +30,50 @@ CFG = ModelConfig(
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--new-tokens", type=int, default=48)
-    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--capacity", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--static", action="store_true",
+                    help="static-batch baseline instead of continuous")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(CFG, use_pallas=args.use_pallas)
     params = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
-    eng = Engine(params, cfg,
-                 ServeConfig(max_len=args.prompt_len + args.new_tokens,
-                             temperature=args.temperature))
-
     rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    out = eng.generate(prompts, args.new_tokens)
-    print(f"[serve] batch={args.batch} prompt={args.prompt_len} "
-          f"generated={out.shape[1]} tokens/request")
-    print(f"[serve] prefill {eng.stats['prefill_s']:.2f}s, decode "
-          f"{eng.stats['tokens_out'] / max(eng.stats['decode_s'], 1e-9):.1f} tok/s")
-    for i in range(min(3, args.batch)):
-        print(f"  req{i}: ...{prompts[i, -5:].tolist()} -> "
-              f"{out[i, :10].tolist()}...")
+    lens = [int(rng.choice([16, 32, 64])) for _ in range(args.requests)]
+    prompts = [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lens]
+    budgets = [int(rng.integers(min(8, args.new_tokens), args.new_tokens + 1))
+               for _ in range(args.requests)]
+    scfg = ServeConfig(max_len=max(lens) + args.new_tokens,
+                       temperature=args.temperature, capacity=args.capacity)
+
+    if args.static:
+        eng = Engine(params, cfg, scfg)
+        for padded, new, _ in static_batches(prompts, budgets, args.capacity):
+            eng.generate(padded, new)
+        print(f"[serve:static] {args.requests} requests in batches of "
+              f"{args.capacity} (padded to batch max), "
+              f"{eng.stats['tokens_out'] / max(eng.stats['decode_s'], 1e-9):.1f} tok/s decode")
+        return
+
+    first_tokens: dict[int, int] = {}
+    eng = ContinuousEngine(
+        params, cfg, scfg,
+        on_token=lambda r, t: first_tokens.setdefault(r.uid, t))
+    handles = [eng.submit(p, n) for p, n in zip(prompts, budgets)]
+    out = eng.run(max_steps=100_000)
+    m = eng.metrics()
+    print(f"[serve:continuous] {args.requests} requests "
+          f"(prompts {min(lens)}-{max(lens)} tokens) over "
+          f"{args.capacity} slots")
+    print(f"[serve:continuous] {m['tokens_per_s']:.1f} tok/s, mean occupancy "
+          f"{m['mean_occupancy']:.1f}, prefill {m['prefill_frac']:.0%} of "
+          f"wall, {eng.stats['prefill_compiles']} prefill shapes compiled")
+    for h in handles[:3]:
+        print(f"  req{h.uid}: prompt[{len(h.prompt)}] -> first={first_tokens[h.uid]} "
+              f"tokens={out[h.uid][:8].tolist()}...")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,21 @@
-"""Serving launcher: batched generation against any assigned arch.
+"""Serving traffic driver: continuous batching under synthetic or traced load.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --smoke \
-        --batch 4 --prompt-len 32 --new-tokens 32
+        --requests 32 --capacity 8 --arrival-rate 16 \
+        --prompt-len-min 8 --prompt-len-max 48 --new-tokens 8 --new-tokens-max 24
 
-With ``--use-pallas --sip-cache PATH`` the model's kernel paths resolve
-SIP-tuned schedules from the store ``repro.launch.tune`` persisted (via the
-registry's contextvar-scoped ``schedule_cache``).
+Generates a mixed-prompt-length request stream (uniform lengths in
+[--prompt-len-min, --prompt-len-max], Poisson arrivals at --arrival-rate
+req/s; 0 = all at once), or replays ``--trace FILE`` — a JSON list of
+``{"prompt_len": int, "new_tokens": int, "arrival": float}`` records — and
+reports throughput plus latency/TTFT percentiles and the engine's
+queue/occupancy/prefill-decode stats.
+
+With ``--use-pallas --sip-cache PATH`` the whole serve loop runs inside the
+registry's ``schedule_cache`` scope, so the model's kernel paths resolve
+SIP-tuned schedules from the store ``repro.launch.tune`` persisted.
+``--static`` runs the same stream through the static-batch baseline engine
+for comparison.
 """
 
 from __future__ import annotations
@@ -13,6 +23,8 @@ from __future__ import annotations
 import argparse
 import contextlib
 import dataclasses
+import json
+import time
 
 import jax
 import numpy as np
@@ -21,17 +33,126 @@ from repro import configs
 from repro.core.registry import schedule_cache
 from repro.models import model as M
 from repro.models import modules as nn
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import (ContinuousEngine, Engine, ServeConfig,
+                                static_batches)
+
+
+@dataclasses.dataclass
+class TrafficSpec:
+    prompt_len: int
+    new_tokens: int
+    arrival: float      # seconds after driver start
+
+
+def make_traffic(args, rng: np.random.Generator) -> list[TrafficSpec]:
+    if args.trace:
+        with open(args.trace) as f:
+            records = json.load(f)
+        return [TrafficSpec(int(r["prompt_len"]), int(r["new_tokens"]),
+                            float(r.get("arrival", 0.0))) for r in records]
+    arrivals = np.zeros(args.requests)
+    if args.arrival_rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                             args.requests))
+    return [TrafficSpec(
+        int(rng.integers(args.prompt_len_min, args.prompt_len_max + 1)),
+        int(rng.integers(args.new_tokens,
+                         max(args.new_tokens_max, args.new_tokens) + 1)),
+        float(a)) for a in arrivals]
+
+
+def _pct(xs: list[float]) -> dict[str, float]:
+    if not xs:
+        return {}
+    return {p: round(float(np.percentile(xs, q)) * 1e3, 1)
+            for p, q in (("p50_ms", 50), ("p95_ms", 95), ("p99_ms", 99))}
+
+
+def drive_continuous(eng: ContinuousEngine, traffic: list[TrafficSpec],
+                     prompts: list[np.ndarray], extras) -> dict:
+    order = sorted(range(len(traffic)), key=lambda i: traffic[i].arrival)
+    handles = []
+    t0 = time.perf_counter()
+    i = 0
+    while i < len(order) or not eng.pool.idle:
+        now = time.perf_counter() - t0
+        while i < len(order) and traffic[order[i]].arrival <= now:
+            j = order[i]
+            handles.append(eng.submit(prompts[j], traffic[j].new_tokens,
+                                      extra=extras[j] if extras else None))
+            i += 1
+        if eng.pool.idle:
+            # nothing in flight: sleep until the next arrival is due
+            time.sleep(max(traffic[order[i]].arrival - now, 0.0))
+            continue
+        eng.step()
+    wall = time.perf_counter() - t0
+    lat = [r.finished_at - r.submitted_at for r in handles]
+    ttft = [r.admitted_at - r.submitted_at for r in handles]
+    toks = sum(len(r.tokens) for r in handles)
+    # top-level tokens_per_s is WALL-clock (includes arrival idle time) and
+    # directly comparable to drive_static's; the engine's busy-time rates
+    # live under "engine"
+    return {"wall_s": round(wall, 3), "tokens": toks,
+            "tokens_per_s": round(toks / wall, 1),
+            "latency": _pct(lat), "ttft": _pct(ttft),
+            "engine": {k: round(v, 3) for k, v in eng.metrics().items()}}
+
+
+def drive_static(eng: Engine, traffic: list[TrafficSpec],
+                 prompts: list[np.ndarray], extras, capacity: int) -> dict:
+    """Baseline: batches of ``capacity`` in arrival order, prompts padded to
+    the batch max, every batch decoding to its longest request."""
+    order = sorted(range(len(traffic)), key=lambda i: traffic[i].arrival)
+    aprompts = [prompts[j] for j in order]
+    abudgets = [traffic[j].new_tokens for j in order]
+    t0 = time.perf_counter()
+    toks = 0
+    for padded, new, idxs in static_batches(aprompts, abudgets, capacity):
+        ei = None
+        if extras:
+            ei = {k: _stack_extra(k, [extras[order[j]][k] for j in idxs],
+                                  padded.shape[1])
+                  for k in extras[0]}
+        eng.generate(padded, new, extra_inputs=ei)
+        toks += sum(abudgets[j] for j in idxs)              # useful tokens
+    wall = time.perf_counter() - t0
+    return {"wall_s": round(wall, 3), "tokens": toks,
+            "tokens_per_s": round(toks / wall, 1)}
+
+
+def _stack_extra(key: str, values: list[np.ndarray], plen: int) -> np.ndarray:
+    """Batch per-request extra inputs; prompt-aligned extras (VLM embeds)
+    are left-padded to the batch prompt length like the tokens."""
+    if key != "embeds":
+        return np.stack(values)
+    out = np.zeros((len(values), plen) + values[0].shape[1:],
+                   values[0].dtype)
+    for r, v in enumerate(values):
+        out[r, plen - v.shape[0]:] = v
+    return out
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--arch", required=True, choices=configs.arch_names())
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=8,
+                    help="decode-batch slots")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals, requests/s (0 = all at start)")
+    ap.add_argument("--trace", default=None,
+                    help="JSON request trace (overrides synthetic traffic)")
+    ap.add_argument("--prompt-len-min", type=int, default=8)
+    ap.add_argument("--prompt-len-max", type=int, default=48)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--new-tokens-max", type=int, default=0,
+                    help="uniform in [--new-tokens, this] when > 0")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static", action="store_true",
+                    help="run the static-batch baseline engine instead")
     ap.add_argument("--use-pallas", action="store_true",
                     help="route fwd-only paths through SIP-tuned kernels")
     ap.add_argument("--sip-cache", default=None,
@@ -43,31 +164,44 @@ def main() -> None:
     if args.use_pallas:
         cfg = dataclasses.replace(cfg, use_pallas=True)
     params = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
-    eng = Engine(params, cfg,
-                 ServeConfig(max_len=args.prompt_len + args.new_tokens,
-                             temperature=args.temperature))
-    rng = np.random.default_rng(0)
-    prompts = rng.integers(0, cfg.vocab,
-                           (args.batch, args.prompt_len)).astype(np.int32)
-    extra = None
+    rng = np.random.default_rng(args.seed)
+    traffic = make_traffic(args, rng)
+    # global maxima, not max(plen_i + new_i): a static batch left-pads to its
+    # longest prompt AND decodes to its largest budget, so the cache must
+    # cover their combination
+    max_len = (max(t.prompt_len for t in traffic)
+               + max(t.new_tokens for t in traffic))
+    scfg = ServeConfig(max_len=max_len, temperature=args.temperature,
+                       capacity=args.capacity, seed=args.seed)
+    prompts = [rng.integers(0, cfg.vocab, t.prompt_len).astype(np.int32)
+               for t in traffic]
+    extras = None
     if cfg.family == "enc_dec":
-        extra = {"enc_embeds": rng.standard_normal(
-            (args.batch, cfg.enc_len, cfg.d_model)).astype(np.float32)}
+        ctx = rng.standard_normal(
+            (cfg.enc_len, cfg.d_model)).astype(np.float32)
+        extras = [{"enc_embeds": ctx} for _ in traffic]
     elif cfg.input_mode == "embeddings":
-        # VLM: prompt is precomputed patch+text embeddings (frontend stub)
-        extra = {"embeds": rng.standard_normal(
-            (args.batch, args.prompt_len, cfg.d_model)).astype(np.float32)}
-    # kernel resolution happens at trace time (first generate), so the cache
-    # scope must wrap generation, not engine construction
+        # VLM: the prompt is precomputed patch+text embeddings (frontend stub)
+        extras = [{"embeds": rng.standard_normal(
+            (t.prompt_len, cfg.d_model)).astype(np.float32)}
+            for t in traffic]
+
+    # kernel resolution happens at trace time, so the cache scope must wrap
+    # the serve loop (late-binding registry handles honor it from then on)
     scope = (schedule_cache(args.sip_cache) if args.sip_cache
              else contextlib.nullcontext())
     with scope:
-        out = eng.generate(prompts, args.new_tokens, extra_inputs=extra)
-    print(f"[serve] generated {out.shape} tokens; "
-          f"prefill {eng.stats['prefill_s']:.2f}s, "
-          f"decode {eng.stats['decode_s']:.2f}s "
-          f"({eng.stats['tokens_out'] / max(eng.stats['decode_s'], 1e-9):.1f} tok/s)")
-    print(out[:, :12])
+        if args.static:
+            eng = Engine(params, cfg, scfg)
+            report = drive_static(eng, traffic, prompts, extras,
+                                  args.capacity)
+            print(f"[serve:static] {json.dumps(report)}")
+        else:
+            ceng = ContinuousEngine(params, cfg, scfg,
+                                    example_extra=extras[0] if extras
+                                    else None)
+            report = drive_continuous(ceng, traffic, prompts, extras)
+            print(f"[serve:continuous] {json.dumps(report)}")
 
 
 if __name__ == "__main__":

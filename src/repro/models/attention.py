@@ -76,13 +76,19 @@ def init_attention(key, cfg: ModelConfig, cross: bool = False):
 
 # ------------------------------------------------------------------- rope
 def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
-    """x: (..., S, H, D) with D even; pos: (S,) absolute positions."""
+    """x: (B, S, H, D) with D even; pos: (S,) absolute positions shared by the
+    batch, or (B, S) per-sequence positions (continuous-batching decode, where
+    every slot sits at its own offset)."""
     d = x.shape[-1]
     half = d // 2
     freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
-    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]    # (S, half)
-    cos = jnp.cos(ang)[None, :, None, :]
-    sin = jnp.sin(ang)[None, :, None, :]
+    ang = pos.astype(jnp.float32)[..., None] * freqs   # (S, half) | (B, S, half)
+    if pos.ndim == 2:
+        cos = jnp.cos(ang)[:, :, None, :]
+        sin = jnp.sin(ang)[:, :, None, :]
+    else:
+        cos = jnp.cos(ang)[None, :, None, :]
+        sin = jnp.sin(ang)[None, :, None, :]
     x1, x2 = x[..., :half], x[..., half:]
     return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
                            axis=-1).astype(x.dtype)
@@ -109,9 +115,10 @@ def _sdpa(q, k, v, *, causal: bool, window: int | None,
     """q: (B,Sq,H,D); k,v: (B,Skv,Hkv,D) -> (B,Sq,H,D).  jnp path (GQA).
 
     ``kv_len``: optional scalar — only cache positions < kv_len are valid
-    (decode with a preallocated cache).  ``kv_idx``: explicit q-head -> kv
-    head map (padded-heads mode); kv is gathered to full head count so the
-    heads dim shards over 'model'."""
+    (decode with a preallocated cache) — or a (B,) vector for per-slot decode
+    (continuous batching: every slot has its own valid prefix).  ``kv_idx``:
+    explicit q-head -> kv head map (padded-heads mode); kv is gathered to full
+    head count so the heads dim shards over 'model'."""
     if kv_idx is not None:
         k = shard(k[:, :, kv_idx, :], "batch", "seq", "heads", "head_dim")
         v = shard(v[:, :, kv_idx, :], "batch", "seq", "heads", "head_dim")
@@ -121,18 +128,32 @@ def _sdpa(q, k, v, *, causal: bool, window: int | None,
     qg = q.reshape(b, sq, hkv, group, dh)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) * (dh ** -0.5)
-    rows = jnp.arange(sq)[:, None] + (skv - sq)
-    if kv_len is not None:
-        rows = jnp.arange(sq)[:, None] + (kv_len - sq)
-    cols = jnp.arange(skv)[None, :]
-    mask = jnp.ones((sq, skv), bool)
-    if causal:
-        mask &= cols <= rows
-    if window is not None:
-        mask &= cols > rows - window
-    if kv_len is not None:
-        mask &= cols < kv_len
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_len is not None and jnp.ndim(kv_len) > 0:
+        # per-slot: mask is (B, sq, skv).  A fully-masked row (an empty slot,
+        # kv_len == 0) stays finite — NEG_INF is a large negative, not -inf,
+        # so softmax degrades to uniform and the garbage output is confined
+        # to that slot (the engine discards it).
+        rows = jnp.arange(sq)[None, :, None] + (kv_len[:, None, None] - sq)
+        cols = jnp.arange(skv)[None, None, :]
+        mask = jnp.broadcast_to(cols < kv_len[:, None, None], (b, sq, skv))
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    else:
+        rows = jnp.arange(sq)[:, None] + (skv - sq)
+        if kv_len is not None:
+            rows = jnp.arange(sq)[:, None] + (kv_len - sq)
+        cols = jnp.arange(skv)[None, :]
+        mask = jnp.ones((sq, skv), bool)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        if kv_len is not None:
+            mask &= cols < kv_len
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
     return o.reshape(b, sq, h, dh).astype(q.dtype)
@@ -146,9 +167,16 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
     """Self-attention.  Modes:
       train/prefill: cache=None (optionally return_cache -> fresh cache)
       decode: cache={'k','v','len'} preallocated; x is (B, 1, d)
+
+    ``pos_offset`` / ``cache['len']`` may be (B,) vectors — per-slot decode
+    for the continuous-batching engine, where each batch slot holds a request
+    at its own sequence position.
     """
     b, s, d = x.shape
-    pos = jnp.arange(s) + pos_offset
+    if jnp.ndim(pos_offset) > 0:
+        pos = jnp.arange(s)[None, :] + pos_offset[:, None]   # (B, S) per slot
+    else:
+        pos = jnp.arange(s) + pos_offset
     q, k, v = _qkv(p, x, cfg, pos)
     q = shard(q, "batch", "seq", "heads", "head_dim")
     k = shard(k, "batch", "seq", "kv_heads", "head_dim")
@@ -162,10 +190,19 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
         # SWA ring buffer: slot(p) = p % size once the cache is window-sized
         rolling = cfg.window is not None and size <= cfg.window
         w_idx = idx % size if rolling else idx
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, w_idx, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, w_idx, 0, 0))
+        if jnp.ndim(idx) > 0:
+            # per-slot decode (s == 1): scatter each slot's token at its own
+            # cache position
+            rows_b = jnp.arange(b)
+            ck = cache["k"].at[rows_b, w_idx].set(
+                k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows_b, w_idx].set(
+                v[:, 0].astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, w_idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, w_idx, 0, 0))
         new_cache = {"k": ck, "v": cv, "len": idx + s}
         # rolling: slot indices are not positions — causal/window masks do not
         # apply; every slot < min(len, size) is in-window by construction.

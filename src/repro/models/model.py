@@ -384,6 +384,121 @@ def _hybrid_decode(p, x, caches, cfg: ModelConfig):
     return x, new
 
 
+# ============================================== per-slot caches (cont. batching)
+# The continuous-batching engine (repro.serve.engine.ContinuousEngine) keeps a
+# fixed-capacity decode batch whose slots hold independent requests.  Each
+# request is prefilled alone (batch 1) and its cache segment is spliced into
+# its slot; cache-position leaves ("len") become per-slot vectors so decode
+# masks/rope run at each slot's own offset (attention.py handles the (B,)
+# form).  The batch axis of every cache leaf is discovered STRUCTURALLY — by
+# diffing ``jax.eval_shape`` of prefill at two batch sizes — so the helpers
+# work for every family (KV caches, SSM states, hybrid, enc-dec) without a
+# per-family layout table.
+
+#: sentinel axis for cache leaves whose shape does not depend on batch (the
+#: per-layer "len" scalars); they gain a trailing slot axis instead
+SLOT_AXIS_SHARED = -1
+
+
+def _cache_shapes(p: Params, cfg: ModelConfig, max_len: int, batch: int,
+                  example_inputs: dict[str, jnp.ndarray]):
+    """Shape-only prefill -> decode-cache ShapeDtypeStructs at ``batch``."""
+    inputs = {k: jax.ShapeDtypeStruct((batch,) + tuple(v.shape[1:]),
+                                      jnp.asarray(v).dtype)
+              for k, v in example_inputs.items()}
+    _, caches = jax.eval_shape(
+        functools.partial(prefill, cfg=cfg, max_len=max_len), p, inputs)
+    return caches
+
+
+def slot_cache_axes(p: Params, cfg: ModelConfig, max_len: int,
+                    example_inputs: dict[str, jnp.ndarray]):
+    """Per-leaf batch axis of the decode-cache pytree.
+
+    Exactly one axis of each batch-dependent leaf changes when the prefill
+    batch changes (batch enters every leaf at most once); leaves that do not
+    change (cache-position scalars) map to :data:`SLOT_AXIS_SHARED`.
+    """
+    a = _cache_shapes(p, cfg, max_len, 2, example_inputs)
+    b = _cache_shapes(p, cfg, max_len, 3, example_inputs)
+
+    def axis(sa, sb) -> int:
+        diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                if x != y]
+        if not diff:
+            return SLOT_AXIS_SHARED
+        assert len(diff) == 1, f"ambiguous batch axis for {sa.shape}"
+        return diff[0]
+
+    return jax.tree.map(axis, a, b)
+
+
+def alloc_slot_caches(p: Params, cfg: ModelConfig, capacity: int,
+                      max_len: int, example_inputs: dict[str, jnp.ndarray]):
+    """Zero-initialized decode caches for ``capacity`` slots.
+
+    Shared (batch-independent) leaves become per-slot vectors via a trailing
+    slot axis — scanning over the layer axis then yields a (B,) ``len`` per
+    layer, which the attention/rope per-slot paths consume directly.
+    Returns ``(caches, axes)``; ``axes`` is what insert/evict need.
+    """
+    shapes = _cache_shapes(p, cfg, max_len, 1, example_inputs)
+    axes = slot_cache_axes(p, cfg, max_len, example_inputs)
+
+    def alloc(leaf, ax):
+        if ax == SLOT_AXIS_SHARED:
+            return jnp.zeros(leaf.shape + (capacity,), leaf.dtype)
+        shp = list(leaf.shape)
+        shp[ax] = capacity
+        return jnp.zeros(shp, leaf.dtype)
+
+    return jax.tree.map(alloc, shapes, axes), axes
+
+
+def insert_slots(caches, group_caches, slots, axes):
+    """Splice a batch-G prefill cache into slots ``slots`` ((G,) int32) of a
+    batched cache — one scatter per leaf, so admitting a whole same-length
+    group costs one dispatch instead of G cache-sized copies.
+
+    ``slots`` may hold any (non-contiguous) slot ids; the group must share
+    one prompt length, so shared leaves (per-layer lengths) are one scalar
+    per layer broadcast across the group's slots.
+    """
+    g = slots.shape[0]
+
+    def ins(batch_leaf, grp, ax):
+        grp = jnp.asarray(grp).astype(batch_leaf.dtype)
+        if ax == SLOT_AXIS_SHARED:
+            tiled = jnp.broadcast_to(grp[..., None], grp.shape + (g,))
+            return batch_leaf.at[..., slots].set(tiled)
+        moved = jnp.moveaxis(batch_leaf, ax, 0)
+        moved = moved.at[slots].set(jnp.moveaxis(grp, ax, 0))
+        return jnp.moveaxis(moved, 0, ax)
+
+    return jax.tree.map(ins, caches, group_caches, axes)
+
+
+def insert_slot(caches, single_caches, slot, axes):
+    """Batch-1 convenience wrapper over :func:`insert_slots`."""
+    return insert_slots(caches, single_caches,
+                        jnp.reshape(jnp.asarray(slot, jnp.int32), (1,)), axes)
+
+
+def evict_slot(caches, slot, axes):
+    """Invalidate slot ``slot``: zero its cache-position leaves so attention
+    sees an empty prefix.  State leaves are left in place — the next
+    ``insert_slot`` into this slot overwrites them wholesale, and per-slot
+    masking/state flow keeps a stale slot from influencing any other."""
+    def ev(leaf, ax):
+        if ax != SLOT_AXIS_SHARED:
+            return leaf
+        zero = jnp.zeros(leaf.shape[:-1] + (1,), leaf.dtype)
+        return jax.lax.dynamic_update_slice_in_dim(leaf, zero, slot,
+                                                   axis=leaf.ndim - 1)
+
+    return jax.tree.map(ev, caches, axes)
+
+
 def _decode_enc_dec(p, caches, tokens, cfg: ModelConfig):
     dt = jnp.dtype(cfg.dtype)
     x = p["dec_embed"].astype(dt)[tokens][:, None, :]

@@ -1,0 +1,9 @@
+"""Serving subsystem: static-batch reference engine, continuous-batching
+engine, and the slot allocator they share."""
+
+from repro.serve.engine import (ContinuousEngine, Engine, Request,
+                                ServeConfig)
+from repro.serve.slots import SlotPool
+
+__all__ = ["ContinuousEngine", "Engine", "Request", "ServeConfig",
+           "SlotPool"]

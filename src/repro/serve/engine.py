@@ -1,9 +1,26 @@
-"""Batched serving engine: continuous prefill + decode over a KV/SSM cache.
+"""Serving engines over the SIP-tuned model stack.
 
-A minimal-but-real production shape: fixed-capacity batch slots, greedy or
-temperature sampling, per-slot stop handling, and stats.  prefill/decode are
-the same jitted step functions the dry-run lowers (launch/steps.py), so a
-schedule cached by SIP benefits serving directly.
+Two engines share the jitted prefill/decode step functions (models/model.py —
+the same functions the dry-run lowers, so schedules cached by SIP benefit
+serving directly):
+
+* :class:`Engine` — static batch: one prefill over (B, S) prompts, lockstep
+  decode until every row stops.  Kept as the differential-correctness
+  reference (single-request generation) and the throughput baseline.
+* :class:`ContinuousEngine` — continuous batching: a FIFO request queue with
+  slot-based admission into a fixed-capacity decode batch.  Each arriving
+  request is prefilled alone (exact prompt length, batch 1), its KV/SSM cache
+  segment is spliced into a free slot (models/model.py per-slot helpers), and
+  all occupied slots decode in lockstep — finished slots are evicted and
+  refilled from the queue without stalling the batch.  Per-request stop
+  (eos / max tokens), streaming emission via ``on_token``, and a stats
+  surface (queue depth, slot occupancy, prefill/decode split, tokens/s).
+
+Kernel resolution happens at trace time, so wrap serving in
+``repro.core.registry.schedule_cache(path)`` to serve SIP-tuned schedules on
+the hot path (see launch/serve.py).  Registry handles are late-binding: a
+scope entered before engine construction is honored, and tuning that bumps
+``ScheduleCache.version`` mid-flight re-resolves on the next trace.
 """
 
 from __future__ import annotations
@@ -11,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -19,24 +36,34 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serve.slots import SlotPool
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_len: int = 256
+    max_len: int = 256              # per-slot cache length (prompt + new)
     temperature: float = 0.0        # 0 = greedy
     seed: int = 0
+    capacity: int = 8               # decode-batch slots (ContinuousEngine)
 
 
 class Engine:
-    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig = ServeConfig()):
+    """Static-batch engine: one prefill, lockstep decode, whole batch stops
+    together.  The B=1 case is the correctness reference for the
+    continuous-batching engine."""
+
+    def __init__(self, params, cfg: ModelConfig,
+                 scfg: ServeConfig | None = None):
         self.params = params
         self.cfg = cfg
-        self.scfg = scfg
+        self.scfg = scfg = ServeConfig() if scfg is None else scfg
         self._prefill = jax.jit(functools.partial(
             M.prefill, cfg=cfg, max_len=scfg.max_len))
+        # donate the cache buffers: decode updates them in place instead of
+        # copying the full KV tree every step
         self._decode = jax.jit(functools.partial(
-            _decode_sample, cfg=cfg, temperature=scfg.temperature))
+            _decode_sample, cfg=cfg, temperature=scfg.temperature),
+            donate_argnums=(1,))
         self.stats: dict[str, Any] = {"prefill_s": 0.0, "decode_s": 0.0,
                                       "tokens_out": 0}
 
@@ -71,6 +98,265 @@ class Engine:
         self.stats["decode_s"] += time.perf_counter() - t0
         self.stats["tokens_out"] += int(np.size(out))
         return np.stack(out, axis=1)
+
+
+def static_batches(prompts, budgets, capacity: int):
+    """The static-batch baseline's serving plan: arrival-order chunks of
+    ``capacity``, prompts left-padded to the batch max, each batch decoding
+    to its largest budget.  Yields ``(padded_prompts, new_tokens, indices)``;
+    shared by the traffic driver and the throughput benchmark so the
+    baseline semantics exist exactly once."""
+    for s in range(0, len(prompts), capacity):
+        idxs = list(range(s, min(s + capacity, len(prompts))))
+        plen = max(len(prompts[j]) for j in idxs)
+        padded = np.zeros((len(idxs), plen), np.int32)
+        for r, j in enumerate(idxs):
+            padded[r, plen - len(prompts[j]):] = prompts[j]
+        yield padded, max(budgets[j] for j in idxs), idxs
+
+
+# ======================================================= continuous batching
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``prompt`` is an unbatched (S,) token vector;
+    ``extra`` holds unbatched per-request extra inputs (``enc_embeds`` for
+    enc-dec archs, ``embeds`` for VLM embedding prompts) — the engine adds
+    the batch axis."""
+
+    uid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    eos_id: int | None = None
+    extra: dict[str, np.ndarray] | None = None
+    # -- filled by the engine ------------------------------------------------
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    admitted_at: float | None = None
+    finished_at: float | None = None
+
+    @property
+    def done(self) -> bool:
+        return self.finished_at is not None
+
+    @property
+    def output(self) -> np.ndarray:
+        return np.asarray(self.tokens, np.int32)
+
+
+class ContinuousEngine:
+    """Continuous-batching engine (see module docstring).
+
+    One :meth:`step` = admit-from-queue (prefill each admitted request at its
+    exact prompt length, splice into its slot, emit its first token) + one
+    lockstep decode over the slot batch.  :meth:`run` steps until drained.
+    Greedy decoding is token-identical to single-request
+    ``Engine.generate`` for every request, whatever the arrival order —
+    tests/test_serve_continuous.py holds the engine to that.
+    """
+
+    def __init__(self, params, cfg: ModelConfig,
+                 scfg: ServeConfig | None = None,
+                 example_extra: dict[str, np.ndarray] | None = None,
+                 on_token: Callable[[Request, int], None] | None = None):
+        cfg.validate()
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg = ServeConfig() if scfg is None else scfg
+        self.capacity = scfg.capacity
+        self.on_token = on_token
+        self.pool = SlotPool(scfg.capacity)
+        # conv-state shapes only stabilize once the prompt covers the conv
+        # receptive field — shorter prompts would prefill a cache segment that
+        # cannot be spliced into the fixed-shape slot batch
+        self._min_prompt = (cfg.conv_width - 1
+                            if cfg.family in ("ssm", "hybrid") else 1)
+        s0 = min(max(8, self._min_prompt), scfg.max_len)
+        example_inputs = {"tokens": np.zeros((1, s0), np.int32)}
+        if example_extra:
+            example_inputs.update(
+                {k: np.asarray(v)[None] for k, v in example_extra.items()})
+        self._example_extra_shapes = {
+            k: tuple(np.asarray(v).shape) for k, v in (example_extra or {}).items()}
+        self.caches, self._axes = M.alloc_slot_caches(
+            params, cfg, scfg.capacity, scfg.max_len, example_inputs)
+        self._prefill = jax.jit(functools.partial(
+            M.prefill, cfg=cfg, max_len=scfg.max_len))
+        # the slot batch is donated through decode and insert, so the steady
+        # state mutates ONE cache allocation instead of copying the full
+        # KV/SSM tree every step/admission
+        self._decode = jax.jit(functools.partial(
+            _decode_sample, cfg=cfg, temperature=scfg.temperature),
+            donate_argnums=(1,))
+        self._insert = jax.jit(
+            lambda caches, grp, slots: M.insert_slots(caches, grp, slots,
+                                                      self._axes),
+            donate_argnums=(0,))
+        self.tokens = np.zeros(scfg.capacity, np.int32)   # next decode inputs
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self._uid = 0
+        self._prefill_shapes_seen: set[tuple[int, int]] = set()
+        self.stats: dict[str, Any] = {
+            "prefill_s": 0.0, "decode_s": 0.0, "tokens_out": 0,
+            "prefill_tokens": 0, "submitted": 0, "admitted": 0,
+            "completed": 0, "steps": 0, "decode_steps": 0,
+            "occupancy_sum": 0, "queue_depth_sum": 0, "prefill_compiles": 0,
+        }
+
+    # -------------------------------------------------------------- ingress
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               eos_id: int | None = None,
+               extra: dict[str, np.ndarray] | None = None) -> Request:
+        """Enqueue one request; returns its :class:`Request` handle."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if max_new_tokens < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got "
+                             f"{max_new_tokens}")
+        if len(prompt) < self._min_prompt:
+            raise ValueError(
+                f"{self.cfg.family} prompts need >= {self._min_prompt} "
+                f"tokens (conv receptive field), got {len(prompt)}")
+        if len(prompt) + max_new_tokens > self.scfg.max_len:
+            raise ValueError(
+                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
+                f"exceeds max_len ({self.scfg.max_len})")
+        got = {k: tuple(np.asarray(v).shape) for k, v in (extra or {}).items()}
+        for k, shape in self._example_extra_shapes.items():
+            # seq-varying extras (VLM embeds) follow the prompt; fixed-shape
+            # extras (enc-dec context) must match the engine's allocation
+            if k == "enc_embeds" and got.get(k) != shape:
+                raise ValueError(f"extra {k!r} must have shape {shape}, "
+                                 f"got {got.get(k)}")
+        if "embeds" in got and got["embeds"][0] != len(prompt):
+            # prefill advances the cache by the EMBEDS length, so a mismatch
+            # would silently break the max_len/position accounting above
+            raise ValueError(f"extra 'embeds' length {got['embeds'][0]} "
+                             f"must match the prompt length {len(prompt)}")
+        req = Request(uid=self._uid, prompt=prompt,
+                      max_new_tokens=max_new_tokens, eos_id=eos_id,
+                      extra=extra, submitted_at=time.perf_counter())
+        self._uid += 1
+        self.stats["submitted"] += 1
+        self.pool.submit(req)
+        return req
+
+    # ----------------------------------------------------------------- step
+    def step(self) -> list[Request]:
+        """Admit + prefill waiting requests into free slots, then run one
+        lockstep decode over the occupied batch.  Returns requests that
+        finished during this step."""
+        finished: list[Request] = []
+        groups: dict[Any, list[tuple[int, Request]]] = {}
+        for slot, req in self.pool.admit():
+            # coalesce same-shape admissions into one batched prefill — the
+            # per-row math is identical to batch-1, at one dispatch per group
+            shape_key = (len(req.prompt),
+                         tuple(sorted((k, np.asarray(v).shape)
+                                      for k, v in (req.extra or {}).items())))
+            groups.setdefault(shape_key, []).append((slot, req))
+        for group in groups.values():
+            self._admit_group(group, finished)
+        if self.pool.occupancy:
+            t0 = time.perf_counter()
+            self._key, sub = jax.random.split(self._key)
+            tok, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(self.tokens), key=sub)
+            tok = np.asarray(tok)
+            self.stats["decode_s"] += time.perf_counter() - t0
+            self.stats["decode_steps"] += 1
+            for slot, req in list(self.pool.held()):
+                self.tokens[slot] = int(tok[slot])
+                self._emit(slot, req, int(tok[slot]), finished)
+        self.stats["steps"] += 1
+        self.stats["occupancy_sum"] += self.pool.occupancy
+        self.stats["queue_depth_sum"] += self.pool.queue_depth
+        return finished
+
+    def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
+        """Step until queue and slots drain; returns {uid: generated tokens}."""
+        out: dict[int, np.ndarray] = {}
+        steps = 0
+        while not self.pool.idle:
+            for req in self.step():
+                out[req.uid] = req.output
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError(f"engine not drained after {max_steps} "
+                                   f"steps ({self.pool!r})")
+        return out
+
+    # ------------------------------------------------------------ internals
+    def _admit_group(self, group: list[tuple[int, Request]],
+                     finished: list[Request]) -> None:
+        t0 = time.perf_counter()
+        slots = np.asarray([s for s, _ in group], np.int32)
+        prompts = np.stack([r.prompt for _, r in group])
+        inputs = {"tokens": jnp.asarray(prompts)}
+        for k in (group[0][1].extra or {}):
+            inputs[k] = jnp.asarray(
+                np.stack([np.asarray(r.extra[k]) for _, r in group]))
+        shape = (len(group), prompts.shape[1])
+        if shape not in self._prefill_shapes_seen:
+            self._prefill_shapes_seen.add(shape)
+            self.stats["prefill_compiles"] += 1
+        logits, grp = self._prefill(self.params, inputs)
+        self._key, sub = jax.random.split(self._key)
+        toks = np.asarray(_pick(logits, self.scfg.temperature, sub))
+        self.caches = self._insert(self.caches, grp, jnp.asarray(slots))
+        jax.block_until_ready(logits)
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += int(prompts.size)
+        self.stats["admitted"] += len(group)
+        now = time.perf_counter()
+        for (slot, req), tok in zip(group, toks):
+            req.admitted_at = now
+            self.tokens[slot] = int(tok)
+            self._emit(slot, req, int(tok), finished)
+
+    def _emit(self, slot: int, req: Request, tok: int,
+              finished: list[Request]) -> None:
+        req.tokens.append(tok)
+        self.stats["tokens_out"] += 1
+        if self.on_token is not None:
+            self.on_token(req, tok)
+        if (len(req.tokens) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id)):
+            req.finished_at = time.perf_counter()
+            # eviction is lazy: a freed slot's stale state is confined to its
+            # own batch row (per-slot masks/state), and the next admission's
+            # insert overwrites the entire row — so completion costs no
+            # cache-sized dispatch (models.evict_slot exists for callers that
+            # want eager invalidation)
+            self.pool.release(slot)
+            self.stats["completed"] += 1
+            finished.append(req)
+
+    # -------------------------------------------------------------- metrics
+    def reset_stats(self) -> None:
+        """Zero the timing/gauge counters (e.g. after a warmup pass) while
+        keeping compile bookkeeping, so metrics describe steady state."""
+        keep = self.stats["prefill_compiles"]
+        for k in self.stats:
+            self.stats[k] = 0.0 if isinstance(self.stats[k], float) else 0
+        self.stats["prefill_compiles"] = keep
+
+    def metrics(self) -> dict[str, float]:
+        """Derived serving metrics (gauge means are per engine step)."""
+        s = self.stats
+        steps = max(s["steps"], 1)
+        return {
+            "queue_depth": float(self.pool.queue_depth),
+            "slot_occupancy": float(self.pool.occupancy),
+            "mean_occupancy": s["occupancy_sum"] / steps,
+            "mean_queue_depth": s["queue_depth_sum"] / steps,
+            "prefill_s": s["prefill_s"],
+            "decode_s": s["decode_s"],
+            "prefill_frac": s["prefill_s"] / max(s["prefill_s"]
+                                                 + s["decode_s"], 1e-9),
+            "tokens_per_s": s["tokens_out"] / max(s["prefill_s"]
+                                                  + s["decode_s"], 1e-9),
+            "decode_tokens_per_s": (s["tokens_out"] - s["admitted"])
+            / max(s["decode_s"], 1e-9),
+        }
 
 
 def _decode_sample(params, caches, token, *, cfg: ModelConfig,

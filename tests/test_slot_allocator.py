@@ -1,0 +1,103 @@
+"""Property-based tests (hypothesis; runs on the vendored stub too) for the
+continuous-batching slot allocator: no slot aliasing, FIFO admission under
+full occupancy, and liveness — every admitted request completes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.serve.slots import SlotPool
+
+
+class TestInvariants:
+    @given(st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_no_slot_aliasing(self, capacity, seed):
+        """Across a random submit/admit/release schedule, a slot is held by
+        at most one item, in range, and never re-issued before release."""
+        rng = np.random.default_rng(seed)
+        pool = SlotPool(capacity)
+        held: dict[int, int] = {}          # shadow model: slot -> item
+        next_item = 0
+        for _ in range(40):
+            op = rng.integers(3)
+            if op == 0:
+                pool.submit(next_item)
+                next_item += 1
+            elif op == 1:
+                for slot, item in pool.admit():
+                    assert 0 <= slot < capacity
+                    assert slot not in held, "slot issued twice"
+                    held[slot] = item
+            elif op == 2 and held:
+                slot = int(rng.choice(sorted(held)))
+                assert pool.release(slot) == held.pop(slot)
+            assert pool.occupancy == len(held) <= capacity
+
+    @given(st.integers(1, 6), st.integers(1, 20), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_fifo_admission_under_full_occupancy(self, capacity, extra, seed):
+        """Fill every slot, queue ``extra`` more, then release in random
+        order: admissions must still come strictly in submit order."""
+        rng = np.random.default_rng(seed)
+        pool = SlotPool(capacity)
+        for i in range(capacity + extra):
+            pool.submit(i)
+        admitted = [item for _, item in pool.admit()]
+        assert admitted == list(range(capacity))       # full occupancy
+        assert pool.admit() == []                      # nothing free
+        while pool.queue_depth or pool.occupancy:
+            occupied = [s for s, _ in pool.held()]
+            if occupied:
+                pool.release(int(rng.choice(occupied)))
+            admitted += [item for _, item in pool.admit()]
+        assert admitted == list(range(capacity + extra))
+
+    @given(st.integers(1, 6), st.lists(st.integers(1, 9), min_size=1,
+                                       max_size=24),
+           st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_every_admitted_request_completes(self, capacity, durations,
+                                              seed):
+        """Engine-shaped simulation: admit, decrement each held item's
+        remaining budget per step, release at zero.  Terminates with every
+        submitted item admitted exactly once and completed."""
+        del seed
+        pool = SlotPool(capacity)
+        remaining = dict(enumerate(durations))
+        for uid in remaining:
+            pool.submit(uid)
+        admitted, completed = [], []
+        for _ in range(sum(durations) + len(durations) + 1):
+            if pool.idle:
+                break
+            admitted += [item for _, item in pool.admit()]
+            for slot, uid in list(pool.held()):
+                remaining[uid] -= 1
+                if remaining[uid] == 0:
+                    pool.release(slot)
+                    completed.append(uid)
+        assert pool.idle, "simulation did not drain"
+        assert sorted(admitted) == sorted(completed) == list(remaining)
+        assert admitted == list(remaining)             # FIFO admission too
+
+
+class TestApi:
+    def test_capacity_must_be_positive(self):
+        with pytest.raises(ValueError, match="capacity"):
+            SlotPool(0)
+
+    def test_release_unheld_raises(self):
+        pool = SlotPool(2)
+        with pytest.raises(KeyError):
+            pool.release(0)
+
+    def test_lowest_slot_first(self):
+        pool = SlotPool(3)
+        for i in range(3):
+            pool.submit(i)
+        assert [s for s, _ in pool.admit()] == [0, 1, 2]
+        pool.release(1)
+        pool.submit(3)
+        assert pool.admit() == [(1, 3)]
