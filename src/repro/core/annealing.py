@@ -26,7 +26,10 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.energy import delta_stats
 from repro.core.schedule import Schedule
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -47,7 +50,8 @@ class AnnealResult:
     initial_raw: float     # T_0, seconds
     history: list[AnnealStep]
     evals: int
-    cache_stats: dict[str, int] | None = None   # CachedEnergy hit/miss, if used
+    cache_stats: dict[str, float] | None = None  # CachedEnergy hit/miss (+
+    #                                              derived hit_rate), if used
 
     @property
     def improvement(self) -> float:
@@ -70,7 +74,8 @@ class Chain:
                  energy: Callable[[Schedule], float],
                  perturb: Callable[[Schedule, np.random.Generator], Schedule | None],
                  *, t_max: float, t_min: float, cooling: float, seed: int,
-                 on_step: Callable[[AnnealStep], None] | None = None):
+                 on_step: Callable[[AnnealStep], None] | None = None,
+                 label: str = "chain0"):
         if cooling <= 1.0:
             raise ValueError(f"cooling must be > 1 (T <- T/L each step), "
                              f"got {cooling}: the loop would never terminate")
@@ -79,6 +84,15 @@ class Chain:
         self.t_min = t_min
         self.cooling = cooling
         self.on_step = on_step
+        self.label = label
+        # search-loop telemetry: counters land in the active metrics
+        # registry (scoped or process default); the per-step energy
+        # trajectory goes to the active tracer, if any, as a counter track
+        # per chain label (plots energy-vs-step in Perfetto)
+        reg = obs_metrics.active_registry()
+        self._m_steps = reg.counter("search.steps")
+        self._m_accepted = reg.counter("search.accepted")
+        self._m_dead = reg.counter("search.dead_steps")
         self.rng = np.random.default_rng(seed)
         t0_raw = energy(x0)
         if not math.isfinite(t0_raw) or t0_raw <= 0:
@@ -109,6 +123,7 @@ class Chain:
         Returns the recorded step, or None when no legal action existed."""
         cand = self.perturb(self.x, self.rng)
         if cand is None:                   # no legal action from x
+            self._m_dead.inc()
             self.T /= self.cooling
             self.step += 1
             return None
@@ -128,6 +143,15 @@ class Chain:
         rec = AnnealStep(step=self.step, temperature=self.T, energy=e_c,
                          reward=-dE if math.isfinite(dE) else 0.0,
                          accepted=accepted, best_energy=self.e_best)
+        self._m_steps.inc()
+        if accepted:
+            self._m_accepted.inc()
+        tr = obs_trace.active_tracer()
+        if tr is not None:
+            vals = {"best": self.e_best, "T": self.T, "step": self.step}
+            if math.isfinite(e_c):
+                vals["energy"] = e_c
+            tr.counter(f"search.energy/{self.label}", vals)
         self.history.append(rec)
         if self.on_step is not None:
             self.on_step(rec)
@@ -158,8 +182,7 @@ def anneal(x0: Schedule,
         chain.advance()
     res = chain.result()
     if before is not None:
-        after = stats()
-        res.cache_stats = {k: after[k] - before.get(k, 0) for k in after}
+        res.cache_stats = delta_stats(before, stats())
     return res
 
 

@@ -67,6 +67,12 @@ class LRUCache:
         return {"hits": self.hits, "misses": self.misses,
                 "size": len(self._data)}
 
+    def reset_stats(self) -> None:
+        """Zero the hit/miss counters (entries are kept) — used to scope
+        build-cache stats to one tuning round."""
+        self.hits = 0
+        self.misses = 0
+
 
 @dataclasses.dataclass
 class CacheEntry:

@@ -146,6 +146,28 @@ class CachedEnergy:
         return {"hits": self.hits, "misses": self.misses,
                 "size": len(self._memo)}
 
+    def reset_stats(self) -> None:
+        """Zero the hit/miss counters (the memo itself is kept).
+
+        ``SipKernel.tune`` calls this between rounds so each round's
+        ``cache_stats`` is attributable to that round alone."""
+        self.hits = 0
+        self.misses = 0
+
+
+def delta_stats(before: dict[str, int] | None,
+                after: dict[str, int]) -> dict[str, float]:
+    """Per-window cache stats: counter deltas plus the derived hit ratio.
+
+    This is what lands in ``AnnealResult.cache_stats`` — callers get
+    ``hit_rate`` (0.0 when the window saw no lookups) instead of having to
+    re-derive it from raw hits/misses."""
+    before = before or {}
+    d: dict[str, float] = {k: after[k] - before.get(k, 0) for k in after}
+    total = d.get("hits", 0) + d.get("misses", 0)
+    d["hit_rate"] = d.get("hits", 0) / total if total > 0 else 0.0
+    return d
+
 
 @dataclasses.dataclass
 class GuardedEnergy:

@@ -26,6 +26,7 @@ from repro.core.cache import LRUCache, ScheduleCache
 from repro.core.ir import Program
 from repro.core.mutation import MutationPolicy
 from repro.core.schedule import Schedule, SearchSpace
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -206,23 +207,39 @@ class SipKernel:
 
         results = []
         for r in range(config.rounds):
+            if r and callable(getattr(guarded, "reset_stats", None)):
+                # zero the shared energy cache's hit/miss counters so this
+                # round's cache_stats (and any direct guarded.stats() read)
+                # describes this round alone; the memo itself persists
+                guarded.reset_stats()
+            builds.reset_stats()
+            builds_before = builds.stats()
             # chains==1 with seed offset r*1 reproduces the legacy sequential
             # restart (anneal(seed=config.seed+r)) bit-for-bit
-            pop = population.population_anneal(
-                x0, guarded, policy.propose, chains=config.chains,
-                t_max=config.t_max, t_min=config.t_min,
-                cooling=config.cooling, ladder=config.ladder,
-                exchange_every=config.exchange_every,
-                seed=config.seed + r * config.chains, memoize=False)
+            with obs_trace.span("tune.round", kernel=self.name, round=r,
+                                chains=config.chains) as sp:
+                pop = population.population_anneal(
+                    x0, guarded, policy.propose, chains=config.chains,
+                    t_max=config.t_max, t_min=config.t_min,
+                    cooling=config.cooling, ladder=config.ladder,
+                    exchange_every=config.exchange_every,
+                    seed=config.seed + r * config.chains, memoize=False)
+                sp["evals"] = pop.evals
+                sp["best_energy"] = pop.best_energy
             res = pop.best_result()
             results.append(res)
             # final, heavier probabilistic test before the entry may be ranked
-            rep = testing.probabilistic_test(built(res.best), self.oracle, specs,
-                                             config.final_samples, rng,
-                                             rtol=config.rtol, atol=config.atol)
+            with obs_trace.span("tune.final_test", kernel=self.name, round=r):
+                rep = testing.probabilistic_test(
+                    built(res.best), self.oracle, specs,
+                    config.final_samples, rng,
+                    rtol=config.rtol, atol=config.atol)
             meta: dict[str, Any] = dict(improvement=res.improvement,
                                         evals=pop.evals, chains=config.chains,
                                         exchanges=pop.exchanges)
+            # built-kernel LRU over this round, incl. the derived hit ratio
+            meta["build_cache"] = energy_mod.delta_stats(builds_before,
+                                                         builds.stats())
             if res.cache_stats is not None:
                 meta["cache_stats"] = res.cache_stats
             self.cache.put(self.name, sig, res.best, energy=res.best_raw,

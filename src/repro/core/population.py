@@ -32,8 +32,10 @@ from typing import Callable
 import numpy as np
 
 from repro.core.annealing import AnnealResult, AnnealStep, Chain
-from repro.core.energy import CachedEnergy
+from repro.core.energy import CachedEnergy, delta_stats
 from repro.core.schedule import Schedule
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass
@@ -42,7 +44,8 @@ class PopulationResult:
 
     chains: list[AnnealResult]
     exchanges: int                           # state migrations that occurred
-    cache_stats: dict[str, int] | None = None  # aggregate across all chains
+    cache_stats: dict[str, float] | None = None  # aggregate across chains,
+    #                                              incl. derived hit_rate
 
     @property
     def best_index(self) -> int:
@@ -112,23 +115,29 @@ def population_anneal(
 
     pool = [Chain(x0, energy, perturb,
                   t_max=t_max * ladder ** c, t_min=t_min,
-                  cooling=cooling, seed=seed + c, on_step=on_step)
+                  cooling=cooling, seed=seed + c, on_step=on_step,
+                  label=f"chain{c}")
             for c in range(chains)]
     exchanges = 0
     lockstep = 0
+    m_exchanges = obs_metrics.active_registry().counter("search.exchanges")
     while any(not c.done for c in pool):
         for c in pool:
             if not c.done:
                 c.advance()
         lockstep += 1
         if chains > 1 and exchange_every > 0 and lockstep % exchange_every == 0:
-            exchanges += _exchange(pool)
+            moved = _exchange(pool)
+            exchanges += moved
+            if moved:
+                m_exchanges.inc(moved)
+                obs_trace.instant("search.exchange", lockstep=lockstep,
+                                  exchanges=exchanges)
 
     result = PopulationResult(chains=[c.result() for c in pool],
                               exchanges=exchanges)
     if before is not None:
-        after = stats()
-        result.cache_stats = {k: after[k] - before.get(k, 0) for k in after}
+        result.cache_stats = delta_stats(before, stats())
     return result
 
 

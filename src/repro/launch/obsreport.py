@@ -1,0 +1,168 @@
+"""Render or validate a repro.obs trace — the human end of the telemetry.
+
+    PYTHONPATH=src python -m repro.launch.obsreport run_trace.json
+    PYTHONPATH=src python -m repro.launch.obsreport run_trace.json --validate
+    PYTHONPATH=src python -m repro.launch.obsreport run_trace.json \
+        --metrics-json run_metrics.json
+    PYTHONPATH=src python -m repro.launch.obsreport live.jsonl --kind workloads
+
+Default mode summarizes a Chrome-trace/JSONL file produced by
+``launch/tune.py --trace`` or ``launch/serve.py --trace``: top spans by
+total time, counter-track extrema (the per-chain energy-vs-step trajectory
+of a search run), and — with ``--metrics-json`` — histogram percentiles and
+counters from the matching metrics snapshot.  ``--validate`` schema-checks
+the file instead (event shape + span nesting, see
+``repro.obs.trace.validate_events``) and exits non-zero on any violation;
+``--kind workloads`` treats the file as a ``WorkloadRecorder`` JSONL and
+summarizes (or validates) the recorded serving mix.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.obs.recorder import WorkloadRecorder
+from repro.obs.trace import load_trace, validate_events
+
+_WORKLOAD_KINDS = {"prefill", "decode", "submit"}
+
+
+def _fmt_ms(us: float) -> str:
+    return f"{us / 1e3:10.3f}"
+
+
+def summarize_spans(events: list[dict], top: int = 15) -> list[str]:
+    agg: dict[str, list[float]] = {}
+    for ev in events:
+        if ev.get("ph") == "X":
+            agg.setdefault(ev["name"], []).append(float(ev.get("dur", 0.0)))
+    if not agg:
+        return ["  (no spans)"]
+    lines = [f"  {'span':<28}{'count':>7}{'total ms':>12}{'mean ms':>12}"
+             f"{'max ms':>12}"]
+    ranked = sorted(agg.items(), key=lambda kv: -sum(kv[1]))[:top]
+    for name, durs in ranked:
+        lines.append(f"  {name:<28}{len(durs):>7}{_fmt_ms(sum(durs)):>12}"
+                     f"{_fmt_ms(sum(durs) / len(durs)):>12}"
+                     f"{_fmt_ms(max(durs)):>12}")
+    dropped = len(agg) - len(ranked)
+    if dropped > 0:
+        lines.append(f"  ... {dropped} more span name(s) below the top {top}")
+    return lines
+
+
+def summarize_counters(events: list[dict]) -> list[str]:
+    """Counter tracks as (first, min, last) — for an energy track this is
+    the energy-vs-step story of the search: where it started, the best it
+    found, where it ended."""
+    tracks: dict[tuple[str, str], list[float]] = {}
+    for ev in events:
+        if ev.get("ph") != "C":
+            continue
+        for key, v in (ev.get("args") or {}).items():
+            if isinstance(v, (int, float)):
+                tracks.setdefault((ev["name"], key), []).append(float(v))
+    if not tracks:
+        return ["  (no counter tracks)"]
+    lines = [f"  {'track':<40}{'samples':>8}{'first':>10}{'min':>10}"
+             f"{'last':>10}"]
+    for (name, key), vals in sorted(tracks.items()):
+        lines.append(f"  {name + ':' + key:<40}{len(vals):>8}"
+                     f"{vals[0]:>10.4g}{min(vals):>10.4g}{vals[-1]:>10.4g}")
+    return lines
+
+
+def summarize_metrics(path: str) -> list[str]:
+    with open(path) as f:
+        snap = json.load(f)
+    lines = []
+    for name, m in sorted(snap.items()):
+        if m.get("type") == "histogram":
+            lines.append(
+                f"  {name:<28} n={m['count']:<7} mean={m.get('mean', 0):.4g} "
+                f"p50={m.get('p50', 0):.4g} p95={m.get('p95', 0):.4g} "
+                f"p99={m.get('p99', 0):.4g} max={m.get('max', 0):.4g}")
+        else:
+            lines.append(f"  {name:<28} {m.get('type', '?'):<10} "
+                         f"{m.get('value', 0):.6g}")
+    return lines or ["  (empty snapshot)"]
+
+
+def validate_workloads(path: str) -> list[str]:
+    errors = []
+    try:
+        with open(path) as f:
+            lines = [line for line in f if line.strip()]
+    except OSError as e:
+        return [f"{path}: unreadable ({e})"]
+    for i, line in enumerate(lines):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            errors.append(f"line {i}: invalid JSON ({e})")
+            continue
+        if rec.get("kind") not in _WORKLOAD_KINDS:
+            errors.append(f"line {i}: bad kind {rec.get('kind')!r}")
+        for field, ty in (("t", (int, float)), ("prompt_len", int),
+                          ("batch", int), ("dtype", str),
+                          ("occupancy", int), ("queue_depth", int)):
+            if not isinstance(rec.get(field), ty):
+                errors.append(f"line {i}: bad {field!r}: {rec.get(field)!r}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", help="trace file (.json Chrome trace or JSONL) "
+                                 "or WorkloadRecorder JSONL")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check instead of summarizing; non-zero "
+                         "exit on any violation")
+    ap.add_argument("--kind", choices=("trace", "workloads"),
+                    default="trace")
+    ap.add_argument("--metrics-json", default=None,
+                    help="metrics snapshot to summarize alongside the trace")
+    ap.add_argument("--top", type=int, default=15,
+                    help="span names to show (by total time)")
+    args = ap.parse_args(argv)
+
+    if args.validate:
+        if args.kind == "workloads":
+            errors = validate_workloads(args.path)
+        else:
+            try:
+                errors = validate_events(load_trace(args.path))
+            except (OSError, ValueError, json.JSONDecodeError) as e:
+                errors = [f"{args.path}: unreadable trace ({e})"]
+        for err in errors[:50]:
+            print(f"[obsreport] INVALID: {err}")
+        if len(errors) > 50:
+            print(f"[obsreport] ... {len(errors) - 50} more errors")
+        print(f"[obsreport] {args.path}: "
+              f"{'INVALID (%d error(s))' % len(errors) if errors else 'OK'}")
+        return 1 if errors else 0
+
+    if args.kind == "workloads":
+        rec = WorkloadRecorder.load(args.path)
+        print(f"[obsreport] workload mix from {args.path}")
+        print(json.dumps(rec.summary(), indent=1))
+        return 0
+
+    events = load_trace(args.path)
+    print(f"[obsreport] {args.path}: {len(events)} events")
+    print("top spans:")
+    for line in summarize_spans(events, args.top):
+        print(line)
+    print("counter tracks (energy-vs-step etc.):")
+    for line in summarize_counters(events):
+        print(line)
+    if args.metrics_json:
+        print(f"metrics snapshot ({args.metrics_json}):")
+        for line in summarize_metrics(args.metrics_json):
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

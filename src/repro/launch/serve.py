@@ -6,10 +6,18 @@
 
 Generates a mixed-prompt-length request stream (uniform lengths in
 [--prompt-len-min, --prompt-len-max], Poisson arrivals at --arrival-rate
-req/s; 0 = all at once), or replays ``--trace FILE`` — a JSON list of
+req/s; 0 = all at once), or replays ``--replay FILE`` — a JSON list of
 ``{"prompt_len": int, "new_tokens": int, "arrival": float}`` records — and
 reports throughput plus latency/TTFT percentiles and the engine's
 queue/occupancy/prefill-decode stats.
+
+Observability (``repro.obs``): ``--trace PATH`` writes a Chrome-trace JSON
+of the run (prefill/decode spans; open in ui.perfetto.dev, summarize or
+validate with ``repro.launch.obsreport``), ``--metrics-json PATH`` dumps
+the engine's metrics-registry snapshot (counters, occupancy/queue gauges,
+TTFT / inter-token latency histograms), and ``--record-workloads PATH``
+logs the live (shape, dtype, occupancy) mix to a replayable JSONL — the
+``WorkloadRecorder`` seam offline tuning consumes.
 
 With ``--use-pallas --sip-cache PATH`` the whole serve loop runs inside the
 registry's ``schedule_cache`` scope, so the model's kernel paths resolve
@@ -29,7 +37,7 @@ import time
 import jax
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.core.registry import schedule_cache
 from repro.models import model as M
 from repro.models import modules as nn
@@ -45,8 +53,8 @@ class TrafficSpec:
 
 
 def make_traffic(args, rng: np.random.Generator) -> list[TrafficSpec]:
-    if args.trace:
-        with open(args.trace) as f:
+    if args.replay:
+        with open(args.replay) as f:
             records = json.load(f)
         return [TrafficSpec(int(r["prompt_len"]), int(r["new_tokens"]),
                             float(r.get("arrival", 0.0))) for r in records]
@@ -142,8 +150,17 @@ def main() -> None:
                     help="decode-batch slots")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrivals, requests/s (0 = all at start)")
+    ap.add_argument("--replay", default=None,
+                    help="JSON request trace to replay (overrides synthetic "
+                         "traffic)")
     ap.add_argument("--trace", default=None,
-                    help="JSON request trace (overrides synthetic traffic)")
+                    help="write a Chrome-trace JSON of the run (Perfetto-"
+                         "loadable; see repro.launch.obsreport)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the engine's metrics-registry snapshot")
+    ap.add_argument("--record-workloads", default=None,
+                    help="record the live workload mix to a replayable "
+                         "JSONL (repro.obs.WorkloadRecorder)")
     ap.add_argument("--prompt-len-min", type=int, default=8)
     ap.add_argument("--prompt-len-max", type=int, default=48)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -188,9 +205,14 @@ def main() -> None:
 
     # kernel resolution happens at trace time, so the cache scope must wrap
     # the serve loop (late-binding registry handles honor it from then on)
-    scope = (schedule_cache(args.sip_cache) if args.sip_cache
-             else contextlib.nullcontext())
-    with scope:
+    tracer = obs.Tracer() if args.trace else None
+    recorder = obs.WorkloadRecorder() if args.record_workloads else None
+    reg = obs.MetricsRegistry()
+    with contextlib.ExitStack() as stack:
+        if args.sip_cache:
+            stack.enter_context(schedule_cache(args.sip_cache))
+        if tracer is not None:
+            stack.enter_context(obs.tracing(tracer))
         if args.static:
             eng = Engine(params, cfg, scfg)
             report = drive_static(eng, traffic, prompts, extras,
@@ -199,9 +221,19 @@ def main() -> None:
         else:
             ceng = ContinuousEngine(params, cfg, scfg,
                                     example_extra=extras[0] if extras
-                                    else None)
+                                    else None, obs=reg, recorder=recorder)
             report = drive_continuous(ceng, traffic, prompts, extras)
             print(f"[serve:continuous] {json.dumps(report)}")
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"[serve] trace written to {args.trace}")
+    if args.metrics_json:
+        reg.save_json(args.metrics_json)
+        print(f"[serve] metrics snapshot written to {args.metrics_json}")
+    if recorder is not None:
+        recorder.save(args.record_workloads)
+        print(f"[serve] workload mix ({len(recorder)} records) written to "
+              f"{args.record_workloads}")
 
 
 if __name__ == "__main__":

@@ -16,9 +16,10 @@ Training/serving then activate the persisted store with
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 
-from repro import kernels
+from repro import kernels, obs
 from repro.core.jit import TuneConfig
 from repro.core.registry import registry
 from repro.tuning.session import TuningSession
@@ -76,6 +77,12 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-memoize", action="store_true",
                     help="disable the shared energy cache (re-evaluate "
                          "revisited schedules)")
+    ap.add_argument("--trace", default=None,
+                    help="write a Chrome-trace JSON of the tuning run "
+                         "(per-workload/round spans + per-chain energy "
+                         "tracks; see repro.launch.obsreport)")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write a metrics-registry snapshot of the run")
     args = ap.parse_args(argv)
 
     kernels.load_all()
@@ -105,7 +112,21 @@ def main(argv: list[str] | None = None) -> int:
     # pass the path, not a ScheduleCache: the session interns it, so an
     # in-process schedule_cache(args.cache) scope shares the same store
     session = TuningSession(cache=args.cache, config=cfg)
-    runs = session.run(kernels=args.kernel or None, suite=suite, verbose=True)
+    tracer = obs.Tracer() if args.trace else None
+    with contextlib.ExitStack() as stack:
+        if tracer is not None:
+            stack.enter_context(obs.tracing(tracer))
+        reg = stack.enter_context(obs.metrics_scope()) \
+            if args.metrics_json else obs.active_registry()
+        with obs.span("tune.session", suite=suite, seed=args.seed):
+            runs = session.run(kernels=args.kernel or None, suite=suite,
+                               verbose=True)
+    if tracer is not None:
+        tracer.save(args.trace)
+        print(f"[tune] trace written to {args.trace}")
+    if args.metrics_json:
+        reg.save_json(args.metrics_json)
+        print(f"[tune] metrics snapshot written to {args.metrics_json}")
     if not runs:
         raise SystemExit(f"no {suite!r} workloads matched "
                          f"{args.kernel or 'any registered kernel'}")

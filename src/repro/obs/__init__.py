@@ -1,0 +1,33 @@
+"""repro.obs — dependency-free telemetry: metrics, tracing, workload capture.
+
+Three pieces, wired through every layer of the stack:
+
+* :mod:`repro.obs.metrics` — process-wide :class:`MetricsRegistry`
+  (counters / gauges / fixed-bucket histograms) with a contextvar-scoped
+  override (``metrics_scope``) so tests and sessions get isolated
+  registries.
+* :mod:`repro.obs.trace` — structured event :class:`Tracer` with nested
+  spans and a Chrome-trace/Perfetto export; ``with tracing(t):`` activates
+  it, the module-level ``span``/``instant``/``counter`` helpers are no-ops
+  when tracing is off.
+* :mod:`repro.obs.recorder` — :class:`WorkloadRecorder`, the live-traffic →
+  offline-tuning seam (ROADMAP: always-on autotuning).
+
+Everything is stdlib + numpy; nothing here imports jax.
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               active_registry, counter, default_registry,
+                               exponential_edges, gauge, histogram,
+                               metrics_scope)
+from repro.obs.recorder import WorkloadKey, WorkloadRecorder
+from repro.obs.trace import (Tracer, active_tracer, instant, load_trace,
+                             span, tracing, validate_events, validate_trace)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "active_registry",
+    "counter", "default_registry", "exponential_edges", "gauge", "histogram",
+    "metrics_scope", "WorkloadKey", "WorkloadRecorder", "Tracer",
+    "active_tracer", "instant", "load_trace", "span", "tracing",
+    "validate_events", "validate_trace",
+]

@@ -14,7 +14,10 @@ serving directly):
   all occupied slots decode in lockstep — finished slots are evicted and
   refilled from the queue without stalling the batch.  Per-request stop
   (eos / max tokens), streaming emission via ``on_token``, and a stats
-  surface (queue depth, slot occupancy, prefill/decode split, tokens/s).
+  surface (queue depth, slot occupancy, prefill/decode split, tokens/s)
+  built on :mod:`repro.obs` — counters/gauges/latency histograms in a
+  metrics registry, prefill/decode spans on the active tracer, and an
+  optional live-workload recorder (see :class:`ContinuousEngine`).
 
 Kernel resolution happens at trace time, so wrap serving in
 ``repro.core.registry.schedule_cache(path)`` to serve SIP-tuned schedules on
@@ -36,6 +39,9 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.recorder import WorkloadRecorder
 from repro.serve.slots import SlotPool
 
 
@@ -143,6 +149,18 @@ class Request:
         return np.asarray(self.tokens, np.int32)
 
 
+#: the engine's cumulative counters; ``stats`` assembles them in this order
+_STAT_KEYS = ("prefill_s", "decode_s", "tokens_out", "prefill_tokens",
+              "submitted", "admitted", "completed", "steps", "decode_steps",
+              "occupancy_sum", "queue_depth_sum", "prefill_compiles")
+
+
+def _ratio(num: float, den: float) -> float:
+    """A derived rate that is well-defined 0.0 (never inf/NaN, never a
+    division error) for zero-step/zero-token runs."""
+    return num / den if den > 0 else 0.0
+
+
 class ContinuousEngine:
     """Continuous-batching engine (see module docstring).
 
@@ -152,18 +170,31 @@ class ContinuousEngine:
     Greedy decoding is token-identical to single-request
     ``Engine.generate`` for every request, whatever the arrival order —
     tests/test_serve_continuous.py holds the engine to that.
+
+    Telemetry: every counter behind :attr:`stats` / :meth:`metrics` lives in
+    a :class:`~repro.obs.metrics.MetricsRegistry` (``obs`` — engine-local by
+    default so concurrent engines never share counters; pass one to fold a
+    serve run into a wider snapshot), alongside TTFT / inter-token-latency /
+    dispatch-time histograms and occupancy / queue-depth gauges.  Prefill
+    and decode dispatches are traced as spans on the active
+    ``repro.obs.trace`` tracer, and an optional :class:`WorkloadRecorder`
+    logs the live (shape, dtype, occupancy) mix for offline tuning.
     """
 
     def __init__(self, params, cfg: ModelConfig,
                  scfg: ServeConfig | None = None,
                  example_extra: dict[str, np.ndarray] | None = None,
-                 on_token: Callable[[Request, int], None] | None = None):
+                 on_token: Callable[[Request, int], None] | None = None,
+                 obs: obs_metrics.MetricsRegistry | None = None,
+                 recorder: WorkloadRecorder | None = None):
         cfg.validate()
         self.params = params
         self.cfg = cfg
         self.scfg = scfg = ServeConfig() if scfg is None else scfg
         self.capacity = scfg.capacity
         self.on_token = on_token
+        self.obs = obs if obs is not None else obs_metrics.MetricsRegistry()
+        self.recorder = recorder
         self.pool = SlotPool(scfg.capacity)
         # conv-state shapes only stabilize once the prompt covers the conv
         # receptive field — shorter prompts would prefill a cache segment that
@@ -195,12 +226,14 @@ class ContinuousEngine:
         self._key = jax.random.PRNGKey(scfg.seed)
         self._uid = 0
         self._prefill_shapes_seen: set[tuple[int, int]] = set()
-        self.stats: dict[str, Any] = {
-            "prefill_s": 0.0, "decode_s": 0.0, "tokens_out": 0,
-            "prefill_tokens": 0, "submitted": 0, "admitted": 0,
-            "completed": 0, "steps": 0, "decode_steps": 0,
-            "occupancy_sum": 0, "queue_depth_sum": 0, "prefill_compiles": 0,
-        }
+        self._c = {k: self.obs.counter(f"serve.{k}") for k in _STAT_KEYS}
+        self._g_occupancy = self.obs.gauge("serve.occupancy")
+        self._g_queue_depth = self.obs.gauge("serve.queue_depth")
+        self._h_ttft = self.obs.histogram("serve.ttft_s")
+        self._h_itl = self.obs.histogram("serve.inter_token_s")
+        self._h_prefill = self.obs.histogram("serve.prefill_call_s")
+        self._h_decode = self.obs.histogram("serve.decode_step_s")
+        self._last_emit: dict[int, float] = {}   # uid -> last token time
 
     # -------------------------------------------------------------- ingress
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
@@ -235,7 +268,13 @@ class ContinuousEngine:
                       max_new_tokens=max_new_tokens, eos_id=eos_id,
                       extra=extra, submitted_at=time.perf_counter())
         self._uid += 1
-        self.stats["submitted"] += 1
+        self._c["submitted"].inc()
+        if self.recorder is not None:
+            self.recorder.record("submit", prompt_len=len(prompt),
+                                 dtype=self.cfg.dtype,
+                                 new_tokens=max_new_tokens,
+                                 occupancy=self.pool.occupancy,
+                                 queue_depth=self.pool.queue_depth)
         self.pool.submit(req)
         return req
 
@@ -256,19 +295,30 @@ class ContinuousEngine:
         for group in groups.values():
             self._admit_group(group, finished)
         if self.pool.occupancy:
+            occ = self.pool.occupancy
             t0 = time.perf_counter()
-            self._key, sub = jax.random.split(self._key)
-            tok, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(self.tokens), key=sub)
-            tok = np.asarray(tok)
-            self.stats["decode_s"] += time.perf_counter() - t0
-            self.stats["decode_steps"] += 1
+            with obs_trace.span("serve.decode", occupancy=occ):
+                self._key, sub = jax.random.split(self._key)
+                tok, self.caches = self._decode(
+                    self.params, self.caches, jnp.asarray(self.tokens),
+                    key=sub)
+                tok = np.asarray(tok)
+            dt = time.perf_counter() - t0
+            self._c["decode_s"].inc(dt)
+            self._c["decode_steps"].inc()
+            self._h_decode.record(dt)
+            if self.recorder is not None:
+                self.recorder.record("decode", batch=self.capacity,
+                                     dtype=self.cfg.dtype, occupancy=occ,
+                                     queue_depth=self.pool.queue_depth)
             for slot, req in list(self.pool.held()):
                 self.tokens[slot] = int(tok[slot])
                 self._emit(slot, req, int(tok[slot]), finished)
-        self.stats["steps"] += 1
-        self.stats["occupancy_sum"] += self.pool.occupancy
-        self.stats["queue_depth_sum"] += self.pool.queue_depth
+        self._c["steps"].inc()
+        self._c["occupancy_sum"].inc(self.pool.occupancy)
+        self._c["queue_depth_sum"].inc(self.pool.queue_depth)
+        self._g_occupancy.set(self.pool.occupancy)
+        self._g_queue_depth.set(self.pool.queue_depth)
         return finished
 
     def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
@@ -297,65 +347,94 @@ class ContinuousEngine:
         shape = (len(group), prompts.shape[1])
         if shape not in self._prefill_shapes_seen:
             self._prefill_shapes_seen.add(shape)
-            self.stats["prefill_compiles"] += 1
-        logits, grp = self._prefill(self.params, inputs)
-        self._key, sub = jax.random.split(self._key)
-        toks = np.asarray(_pick(logits, self.scfg.temperature, sub))
-        self.caches = self._insert(self.caches, grp, jnp.asarray(slots))
-        jax.block_until_ready(logits)
-        self.stats["prefill_s"] += time.perf_counter() - t0
-        self.stats["prefill_tokens"] += int(prompts.size)
-        self.stats["admitted"] += len(group)
+            self._c["prefill_compiles"].inc()
+        with obs_trace.span("serve.prefill", batch=len(group),
+                            prompt_len=int(prompts.shape[1])):
+            logits, grp = self._prefill(self.params, inputs)
+            self._key, sub = jax.random.split(self._key)
+            toks = np.asarray(_pick(logits, self.scfg.temperature, sub))
+            self.caches = self._insert(self.caches, grp, jnp.asarray(slots))
+            jax.block_until_ready(logits)
+        dt = time.perf_counter() - t0
+        self._c["prefill_s"].inc(dt)
+        self._h_prefill.record(dt)
+        self._c["prefill_tokens"].inc(int(prompts.size))
+        self._c["admitted"].inc(len(group))
+        if self.recorder is not None:
+            self.recorder.record("prefill", prompt_len=int(prompts.shape[1]),
+                                 batch=len(group), dtype=self.cfg.dtype,
+                                 occupancy=self.pool.occupancy,
+                                 queue_depth=self.pool.queue_depth)
         now = time.perf_counter()
         for (slot, req), tok in zip(group, toks):
             req.admitted_at = now
+            self._h_ttft.record(now - req.submitted_at)
             self.tokens[slot] = int(tok)
             self._emit(slot, req, int(tok), finished)
 
     def _emit(self, slot: int, req: Request, tok: int,
               finished: list[Request]) -> None:
         req.tokens.append(tok)
-        self.stats["tokens_out"] += 1
+        now = time.perf_counter()
+        last = self._last_emit.get(req.uid)
+        if last is not None:
+            self._h_itl.record(now - last)
+        self._last_emit[req.uid] = now
+        self._c["tokens_out"].inc()
         if self.on_token is not None:
             self.on_token(req, tok)
         if (len(req.tokens) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id)):
             req.finished_at = time.perf_counter()
+            self._last_emit.pop(req.uid, None)
             # eviction is lazy: a freed slot's stale state is confined to its
             # own batch row (per-slot masks/state), and the next admission's
             # insert overwrites the entire row — so completion costs no
             # cache-sized dispatch (models.evict_slot exists for callers that
             # want eager invalidation)
             self.pool.release(slot)
-            self.stats["completed"] += 1
+            self._c["completed"].inc()
             finished.append(req)
 
     # -------------------------------------------------------------- metrics
+    @property
+    def stats(self) -> dict[str, Any]:
+        """Cumulative counters, assembled from the metrics registry (the
+        registry instruments are the source of truth; this dict keeps the
+        pre-registry read surface)."""
+        return {k: c.value for k, c in self._c.items()}
+
     def reset_stats(self) -> None:
-        """Zero the timing/gauge counters (e.g. after a warmup pass) while
-        keeping compile bookkeeping, so metrics describe steady state."""
-        keep = self.stats["prefill_compiles"]
-        for k in self.stats:
-            self.stats[k] = 0.0 if isinstance(self.stats[k], float) else 0
-        self.stats["prefill_compiles"] = keep
+        """Zero the timing/gauge counters and latency histograms (e.g. after
+        a warmup pass) while keeping compile bookkeeping, so metrics
+        describe steady state."""
+        keep = self._c["prefill_compiles"].value
+        for c in self._c.values():
+            c.reset()
+        if keep:
+            self._c["prefill_compiles"].inc(keep)
+        for h in (self._h_ttft, self._h_itl, self._h_prefill, self._h_decode):
+            h.reset()
 
     def metrics(self) -> dict[str, float]:
-        """Derived serving metrics (gauge means are per engine step)."""
+        """Derived serving metrics (gauge means are per engine step).
+
+        Every ratio goes through :func:`_ratio`, so a never-stepped or
+        zero-token engine reports well-defined 0.0 everywhere instead of
+        raising or emitting inf/NaN."""
         s = self.stats
-        steps = max(s["steps"], 1)
+        busy = s["prefill_s"] + s["decode_s"]
         return {
             "queue_depth": float(self.pool.queue_depth),
             "slot_occupancy": float(self.pool.occupancy),
-            "mean_occupancy": s["occupancy_sum"] / steps,
-            "mean_queue_depth": s["queue_depth_sum"] / steps,
-            "prefill_s": s["prefill_s"],
-            "decode_s": s["decode_s"],
-            "prefill_frac": s["prefill_s"] / max(s["prefill_s"]
-                                                 + s["decode_s"], 1e-9),
-            "tokens_per_s": s["tokens_out"] / max(s["prefill_s"]
-                                                  + s["decode_s"], 1e-9),
-            "decode_tokens_per_s": (s["tokens_out"] - s["admitted"])
-            / max(s["decode_s"], 1e-9),
+            "mean_occupancy": _ratio(s["occupancy_sum"], s["steps"]),
+            "mean_queue_depth": _ratio(s["queue_depth_sum"], s["steps"]),
+            "prefill_s": float(s["prefill_s"]),
+            "decode_s": float(s["decode_s"]),
+            "prefill_frac": _ratio(s["prefill_s"], busy),
+            "tokens_per_s": _ratio(s["tokens_out"], busy),
+            "decode_tokens_per_s": _ratio(s["tokens_out"] - s["admitted"],
+                                          s["decode_s"]),
         }
 
 

@@ -25,6 +25,8 @@ from repro.launch import steps
 from repro.models import model as M
 from repro.models import modules as nn
 from repro.models.config import ModelConfig
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import adamw
 
 
@@ -85,15 +87,25 @@ def train(mcfg: ModelConfig, dcfg: DataConfig, tcfg: TrainConfig,
     jfn = jax.jit(step_fn, donate_argnums=(0, 1))
 
     history = []
+    reg = obs_metrics.active_registry()
+    m_steps = reg.counter("train.steps")
+    h_step = reg.histogram("train.step_s")
+    g_loss = reg.gauge("train.loss")
     ctx = partition.mesh_rules(mesh) if mesh is not None else _nullctx()
     with ctx:
         for step in range(start_step, tcfg.total_steps):
             batch = batch_for_model(mcfg, dcfg, step)
             t0 = time.perf_counter()
-            params, opt_state, metrics = jfn(params, opt_state, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
+            with obs_trace.span("train.step", step=step) as sp:
+                params, opt_state, metrics = jfn(params, opt_state, batch)
+                metrics = {k: float(v) for k, v in metrics.items()}
+                sp["loss"] = metrics.get("loss")
             dt = time.perf_counter() - t0
             metrics["step_s"] = dt
+            m_steps.inc()
+            h_step.record(dt)
+            if "loss" in metrics:
+                g_loss.set(metrics["loss"])
             if ft is not None:
                 ft.heartbeat(0, dt)
             if (step + 1) % tcfg.log_every == 0 or step == start_step:
@@ -104,8 +116,9 @@ def train(mcfg: ModelConfig, dcfg: DataConfig, tcfg: TrainConfig,
                 on_metrics(step, metrics)
             history.append(metrics)
             if (step + 1) % tcfg.ckpt_every == 0 or step + 1 == tcfg.total_steps:
-                ckpt.save(step + 1, {"params": params, "opt": opt_state},
-                          blocking=not tcfg.async_ckpt)
+                with obs_trace.span("train.checkpoint", step=step + 1):
+                    ckpt.save(step + 1, {"params": params, "opt": opt_state},
+                              blocking=not tcfg.async_ckpt)
     ckpt.wait()
     return {"history": history, "params": params, "opt_state": opt_state,
             "final_loss": history[-1]["loss"] if history else float("nan")}

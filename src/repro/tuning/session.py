@@ -24,6 +24,8 @@ from repro.core.cache import ScheduleCache
 from repro.core.jit import TuneConfig
 from repro.core.registry import (KernelRegistry, Workload, cache_for_path,
                                  registry, workload_seed)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,8 +97,13 @@ class TuningSession:
         kern = self._kernel(kernel)
         if verbose:
             print(f"[session] {kernel} · {workload.name} (seed={seed})")
-        results = kern.tune(args, dataclasses.replace(self.config, seed=seed),
-                            verbose=verbose)
+        with obs_trace.span("tune.workload", kernel=kernel,
+                            workload=workload.name, seed=seed) as sp:
+            results = kern.tune(args,
+                                dataclasses.replace(self.config, seed=seed),
+                                verbose=verbose)
+            sp["best_energy"] = min(r.best_raw for r in results)
+        obs_metrics.counter("tune.workloads").inc()
         return WorkloadRun(kernel=kernel, workload=workload.name,
                            signature=kern.sig_str(kern.static_of(*args)),
                            seed=seed, results=tuple(results),

@@ -132,6 +132,96 @@ class TestCachedEnergy:
         assert ce.stats()["size"] <= 2
 
 
+class TestCacheHitRate:
+    """cache_stats surfaces the memo hit rate as a ratio, windowed per
+    tune round (obs PR satellite)."""
+
+    def test_population_cache_stats_hit_rate(self):
+        _, policy, energy = _setup()
+        pop = population_anneal(Schedule(), energy, policy.propose, chains=4,
+                                seed=0, cooling=1.1)
+        stats = pop.cache_stats
+        assert stats is not None
+        assert 0.0 <= stats["hit_rate"] <= 1.0
+        assert stats["hit_rate"] == pytest.approx(
+            stats["hits"] / (stats["hits"] + stats["misses"]))
+
+    def test_anneal_cache_stats_hit_rate(self):
+        _, policy, energy = _setup()
+        res = anneal(Schedule(), CachedEnergy(energy), policy.propose,
+                     seed=0, cooling=1.1)
+        stats = res.cache_stats
+        assert 0.0 <= stats["hit_rate"] <= 1.0
+        assert stats["hit_rate"] == pytest.approx(
+            stats["hits"] / max(stats["hits"] + stats["misses"], 1))
+
+    def test_delta_stats_zero_window(self):
+        from repro.core.energy import delta_stats
+
+        assert delta_stats({}, {})["hit_rate"] == 0.0
+        d = delta_stats({"hits": 5, "misses": 5, "size": 5},
+                        {"hits": 5, "misses": 5, "size": 5})
+        assert d == {"hits": 0, "misses": 0, "size": 0, "hit_rate": 0.0}
+        d = delta_stats({"hits": 2, "misses": 8},
+                        {"hits": 5, "misses": 9})
+        assert d["hits"] == 3 and d["misses"] == 1
+        assert d["hit_rate"] == pytest.approx(0.75)
+
+    def test_reset_stats_keeps_memo(self):
+        calls = {"n": 0}
+
+        def energy(s):
+            calls["n"] += 1
+            return 1.0
+
+        ce = CachedEnergy(energy)
+        s = Schedule(knobs={"bm": 1})
+        ce(s), ce(s)
+        assert ce.stats() == {"hits": 1, "misses": 1, "size": 1}
+        ce.reset_stats()
+        assert ce.stats() == {"hits": 0, "misses": 0, "size": 1}
+        ce(s)                                  # memo survived the reset
+        assert calls["n"] == 1
+        assert ce.stats()["hits"] == 1
+
+    def test_lru_reset_stats_keeps_entries(self):
+        lru = LRUCache(maxsize=4)
+        lru.get_or_build("a", lambda: 1)
+        lru.get_or_build("a", lambda: 2)
+        lru.reset_stats()
+        assert lru.stats() == {"hits": 0, "misses": 0, "size": 1}
+        assert lru.get_or_build("a", lambda: 3) == 1
+
+    def test_tune_rounds_window_cache_stats(self):
+        """Each round's cache_stats/build_cache describes that round alone:
+        counters reset between rounds while the memo persists, so per-round
+        hits+misses stay bounded by that round's evals."""
+        from repro.kernels.rmsnorm import ops as rms_ops
+
+        rng = np.random.default_rng(0)
+        kern = rms_ops.make()
+        x = rng.standard_normal((16, 32)).astype(np.float32)
+        g = rng.standard_normal((32,)).astype(np.float32)
+        cfg = TuneConfig(rounds=2, t_min=0.25, cooling=1.25, step_samples=1,
+                         final_samples=2)
+        res = kern.tune([x, g], cfg)
+        assert len(res) == 2
+        sig = kern.sig_str(kern.static_of(x, g))
+        entries = kern.cache.entries(rms_ops.NAME, sig)
+        by_round = {e.round_id: e.meta for e in entries}
+        assert set(by_round) == {0, 1}
+        for r, meta in by_round.items():
+            cs = meta["cache_stats"]
+            assert cs["hits"] + cs["misses"] == meta["evals"], \
+                f"round {r} counters span more than the round"
+            assert 0.0 <= cs["hit_rate"] <= 1.0
+            bc = meta["build_cache"]
+            assert 0.0 <= bc["hit_rate"] <= 1.0
+            assert bc["misses"] <= meta["evals"] + 1   # +1: final test build
+        # round 1 revisits round 0's memoized schedules (same x0 at least)
+        assert by_round[1]["cache_stats"]["hits"] >= 1
+
+
 class TestVectorizedTesting:
     SPECS = [InputSpec((8,))]
 
