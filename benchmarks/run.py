@@ -16,13 +16,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: table2,table3,fig2,roofline,throughput,"
-                         "guided,search,serve")
+                         "guided,search,serve,train_ckpt")
     args = ap.parse_args()
     full = not args.quick
 
     from benchmarks import (fig2_testing, guided_search, roofline,
                             search_throughput, serve_throughput,
-                            table2_attention, table3_gemm, throughput)
+                            table2_attention, table3_gemm, throughput,
+                            train_ckpt)
     suites = {
         "table2": table2_attention.run,
         "table3": table3_gemm.run,
@@ -32,6 +33,7 @@ def main() -> None:
         "guided": guided_search.run,
         "search": search_throughput.run,
         "serve": serve_throughput.run,
+        "train_ckpt": train_ckpt.run,
     }
     only = set(args.only.split(",")) if args.only else set(suites)
     print("name,value,derived")

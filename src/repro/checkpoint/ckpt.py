@@ -22,10 +22,14 @@ import json
 import os
 import shutil
 import threading
+import time
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import metrics as obs_metrics
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -35,6 +39,23 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
                        for p in path)
         flat[key] = np.asarray(jax.device_get(leaf))
     return flat
+
+
+def _snapshot(tree: Any) -> Any:
+    """Donated-safe async snapshot of ``tree``.
+
+    Every jax leaf becomes a fresh device buffer (``jnp.copy`` — dispatched
+    asynchronously, and owned only by the checkpointer, so the train loop is
+    free to donate the originals to the next step) and its device-to-host
+    transfer is kicked off immediately (``copy_to_host_async``).  Nothing
+    here blocks: the host-side materialization happens on the writer thread.
+    """
+    snap = jax.tree.map(
+        lambda x: jnp.copy(x) if isinstance(x, jax.Array) else x, tree)
+    for leaf in jax.tree_util.tree_leaves(snap):
+        if hasattr(leaf, "copy_to_host_async"):
+            leaf.copy_to_host_async()
+    return snap
 
 
 def _sha(a: np.ndarray) -> str:
@@ -47,51 +68,83 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: threading.Thread | None = None
+        self._io_lock = threading.Lock()   # serializes _write + _gc
 
     # ------------------------------------------------------------------ save
-    def save(self, step: int, tree: Any, *, blocking: bool = True) -> None:
-        flat = _flatten(tree)          # device_get on the main thread
+    def save(self, step: int, tree: Any, *, blocking: bool = True) -> float:
+        """Persist ``tree`` as ``step``.  Returns the seconds the CALLER was
+        blocked — for ``blocking=False`` that is only the time to join any
+        previous in-flight save, snapshot the device buffers, and start the
+        host transfer; hashing, serialization, and file I/O all overlap the
+        caller's next steps on the writer thread."""
+        reg = obs_metrics.active_registry()
+        t0 = time.perf_counter()
         if blocking:
-            self._write(step, flat)
+            self._write(step, _flatten(tree))
         else:
             self.wait()                # one async save in flight at a time
+            snap = _snapshot(tree)     # donated-safe, transfer in flight
             self._thread = threading.Thread(
-                target=self._write, args=(step, flat), daemon=True)
+                target=self._write, args=(step,), kwargs={"snap": snap},
+                daemon=True)
             self._thread.start()
+        blocked = time.perf_counter() - t0
+        reg.counter("ckpt.saves").inc()
+        reg.histogram("ckpt.save_block_s").record(blocked)
+        return blocked
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, flat: dict[str, np.ndarray]) -> None:
-        path = os.path.join(self.dir, f"step_{step:08d}")
-        tmp = path + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-        manifest = {
-            "step": step,
-            "hashes": {k: _sha(v) for k, v in flat.items()},
-            "shapes": {k: list(v.shape) for k, v in flat.items()},
-            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        if os.path.exists(path):
-            shutil.rmtree(path)
-        os.replace(tmp, path)
-        # LATEST flips only after a complete, verifiable write
-        latest_tmp = os.path.join(self.dir, "LATEST.tmp")
-        with open(latest_tmp, "w") as f:
-            f.write(os.path.basename(path))
-        os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
-        self._gc()
+    def _write(self, step: int, flat: dict[str, np.ndarray] | None = None,
+               snap: Any = None) -> None:
+        if flat is None:               # async path: materialize on this thread
+            flat = _flatten(snap)
+        with self._io_lock:
+            path = os.path.join(self.dir, f"step_{step:08d}")
+            tmp = path + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            manifest = {
+                "step": step,
+                "hashes": {k: _sha(v) for k, v in flat.items()},
+                "shapes": {k: list(v.shape) for k, v in flat.items()},
+                "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            }
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.replace(tmp, path)
+            # LATEST flips only after a complete, verifiable write
+            latest_tmp = os.path.join(self.dir, "LATEST.tmp")
+            with open(latest_tmp, "w") as f:
+                f.write(os.path.basename(path))
+            os.replace(latest_tmp, os.path.join(self.dir, "LATEST"))
+            self._gc()
 
     def _gc(self) -> None:
+        """Delete old steps, but never the only *verified* checkpoint.
+
+        If none of the ``keep`` newest steps passes verification (e.g. the
+        newest write was corrupted on disk), the newest verified older step
+        is retained — GC must not leave the directory unrestorable.  The
+        common case verifies only the just-written step (short-circuit)."""
         steps = sorted(self.all_steps())
-        for s in steps[:-self.keep]:
+        doomed = steps[:-self.keep] if self.keep > 0 else list(steps)
+        if not doomed:
+            return
+        kept = steps[len(doomed):]
+        if not any(self.verify(s) for s in reversed(kept)):
+            for s in reversed(doomed):
+                if self.verify(s):
+                    doomed = [d for d in doomed if d != s]
+                    break
+        for s in doomed:
             shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
                           ignore_errors=True)
 
@@ -100,7 +153,10 @@ class CheckpointManager:
         out = []
         for name in os.listdir(self.dir):
             if name.startswith("step_") and not name.endswith(".tmp"):
-                out.append(int(name.split("_")[1]))
+                try:
+                    out.append(int(name.split("_")[1]))
+                except (IndexError, ValueError):
+                    continue           # stray file racing the async writer
         return sorted(out)
 
     def latest_step(self) -> int | None:
@@ -109,7 +165,10 @@ class CheckpointManager:
             with open(latest) as f:
                 name = f.read().strip()
             if os.path.exists(os.path.join(self.dir, name)):
-                return int(name.split("_")[1])
+                try:
+                    return int(name.split("_")[1])
+                except (IndexError, ValueError):
+                    pass
         steps = self.all_steps()
         return steps[-1] if steps else None
 

@@ -152,6 +152,20 @@ class ScheduleCache:
         return [CacheEntry.from_dict(d)
                 for d in self._data.get(self.key(kernel_name, signature), [])]
 
+    def drop(self, kernel_name: str, signature: str) -> int:
+        """Remove every entry for one (kernel, signature) key.  Returns the
+        number of entries removed.  Used by crash-safe tuning: a resumed
+        session purges the partial rounds of the workload that was
+        in-flight when the previous session died, then re-runs it from its
+        deterministic seed — the store converges to exactly what an
+        uninterrupted session would have written."""
+        with self._lock:
+            removed = self._data.pop(self.key(kernel_name, signature), None)
+            if removed:
+                self.version += 1
+                self._flush()
+        return len(removed) if removed else 0
+
     def _flush(self) -> None:
         if not self.path:
             return

@@ -20,15 +20,18 @@ A candidate that fails probabilistic testing gets energy = +inf (the paper's
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
 import time
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, MutableSet, Sequence
 
 import numpy as np
 
 from repro.core import costmodel
 from repro.core.ir import Program
 from repro.core.schedule import Schedule
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 FAILED = float("inf")
 
@@ -167,6 +170,83 @@ def delta_stats(before: dict[str, int] | None,
     total = d.get("hits", 0) + d.get("misses", 0)
     d["hit_rate"] = d.get("hits", 0) / total if total > 0 else 0.0
     return d
+
+
+class QuarantineEnergy:
+    """Deadline + crash quarantine around an energy callable (crash-safe
+    search).
+
+    SIP's premise is that perturbed schedules are frequently invalid — a
+    candidate can fail tests (handled by :class:`GuardedEnergy`), but it can
+    also CRASH the evaluator or wedge it forever (a pathological compile, an
+    interpreter loop).  This wrapper makes both non-fatal: the evaluation
+    runs on a worker thread under ``deadline_s``; a candidate that raises or
+    exceeds the deadline is added to ``quarantine`` (by schedule signature),
+    scored ``FAILED``, and never evaluated again.  A wedged worker thread is
+    abandoned (daemon) and a fresh one serves the next call, so one stuck
+    schedule costs one deadline, not the session.
+
+    ``quarantine`` may be a caller-owned set — ``TuningSession`` persists it
+    in the search-state journal so a ``--resume`` skips known-bad schedules
+    without re-paying their deadline.
+    """
+
+    def __init__(self, energy: Callable[[Schedule], float], *,
+                 deadline_s: float | None = None,
+                 quarantine: MutableSet[str] | None = None,
+                 on_quarantine: Callable[[str, str], None] | None = None):
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
+        self.energy = energy
+        self.deadline_s = deadline_s
+        self.quarantine = quarantine if quarantine is not None else set()
+        self.on_quarantine = on_quarantine
+        self.timeouts = 0
+        self.crashes = 0
+        self.skips = 0                  # calls answered from the quarantine
+        self._pool: concurrent.futures.ThreadPoolExecutor | None = None
+
+    def _evaluate(self, schedule: Schedule) -> float:
+        if self.deadline_s is None:
+            return self.energy(schedule)
+        if self._pool is None:
+            self._pool = concurrent.futures.ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="sip-eval")
+        fut = self._pool.submit(self.energy, schedule)
+        try:
+            return fut.result(timeout=self.deadline_s)
+        except concurrent.futures.TimeoutError:
+            fut.cancel()
+            # the worker may be wedged for good — abandon the pool (daemon
+            # threads don't block exit) and lazily build a fresh one
+            self._pool.shutdown(wait=False)
+            self._pool = None
+            raise TimeoutError(
+                f"energy evaluation exceeded {self.deadline_s}s deadline")
+
+    def __call__(self, schedule: Schedule) -> float:
+        sig = schedule.signature()
+        if sig in self.quarantine:
+            self.skips += 1
+            return FAILED
+        try:
+            return self._evaluate(schedule)
+        except Exception as e:
+            if isinstance(e, TimeoutError):
+                self.timeouts += 1
+            else:
+                self.crashes += 1
+            self.quarantine.add(sig)
+            obs_metrics.active_registry().counter("ft.quarantined").inc()
+            obs_trace.instant("ft.quarantine", kind=type(e).__name__,
+                              detail=str(e)[:200])
+            if self.on_quarantine is not None:
+                self.on_quarantine(sig, f"{type(e).__name__}: {e}")
+            return FAILED
+
+    def quarantine_stats(self) -> dict[str, int]:
+        return {"timeouts": self.timeouts, "crashes": self.crashes,
+                "skips": self.skips, "quarantined": len(self.quarantine)}
 
 
 @dataclasses.dataclass

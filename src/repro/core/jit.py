@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, MutableSet, Sequence
 
 import numpy as np
 
@@ -50,6 +50,10 @@ class TuneConfig:
     ladder: float = 1.5           # T_max ratio between temperature rungs
     memoize: bool = True          # share a CachedEnergy across chains+rounds
     build_cache: int = 32         # bounded LRU of built kernels per tune()
+    # --- fault tolerance (crash-safe search) ------------------------------
+    eval_deadline_s: float | None = None  # wall-clock cap per candidate
+    #                                       evaluation; a wedged/crashing
+    #                                       schedule is quarantined, not fatal
 
     def validate(self) -> "TuneConfig":
         """Reject configurations the search would only fail on much later
@@ -70,6 +74,9 @@ class TuneConfig:
         if self.energy not in ("costmodel", "wallclock"):
             raise ValueError(f"unknown energy {self.energy!r} "
                              f"(expected 'costmodel' or 'wallclock')")
+        if self.eval_deadline_s is not None and self.eval_deadline_s <= 0:
+            raise ValueError(f"eval_deadline_s must be > 0, got "
+                             f"{self.eval_deadline_s}")
         return self
 
 
@@ -147,7 +154,13 @@ class SipKernel:
     # ---------------------------------------------------------------- tuning
     def tune(self, example_args: Sequence[Any],
              config: TuneConfig | None = None,
-             verbose: bool = False) -> list[annealing.AnnealResult]:
+             verbose: bool = False, *,
+             quarantine: MutableSet[str] | None = None
+             ) -> list[annealing.AnnealResult]:
+        """Run the offline search.  ``quarantine`` (optional, caller-owned)
+        collects the signatures of schedules whose evaluation crashed or
+        blew ``config.eval_deadline_s`` — they score FAILED and are skipped
+        on re-proposal; ``TuningSession`` persists the set across resumes."""
         config = TuneConfig() if config is None else config
         config.validate()
         static = self.static_of(*example_args)
@@ -194,6 +207,14 @@ class SipKernel:
         else:
             raise ValueError(config.energy)
         guarded: Callable[[Schedule], float] = energy_mod.GuardedEnergy(base, step_test)
+        quarantine_wrap: energy_mod.QuarantineEnergy | None = None
+        if config.eval_deadline_s is not None or quarantine is not None:
+            # inside the memo wrapper: a quarantined verdict (FAILED) is as
+            # cacheable as any other, and quarantine skips stay O(1)
+            quarantine_wrap = energy_mod.QuarantineEnergy(
+                guarded, deadline_s=config.eval_deadline_s,
+                quarantine=quarantine)
+            guarded = quarantine_wrap
         if config.memoize:
             # shared across all chains AND rounds: revisited schedules are
             # free.  This also freezes each schedule's step-test verdict at
@@ -230,13 +251,20 @@ class SipKernel:
             results.append(res)
             # final, heavier probabilistic test before the entry may be ranked
             with obs_trace.span("tune.final_test", kernel=self.name, round=r):
-                rep = testing.probabilistic_test(
-                    built(res.best), self.oracle, specs,
-                    config.final_samples, rng,
-                    rtol=config.rtol, atol=config.atol)
+                try:
+                    rep = testing.probabilistic_test(
+                        built(res.best), self.oracle, specs,
+                        config.final_samples, rng,
+                        rtol=config.rtol, atol=config.atol)
+                except Exception:
+                    # a best candidate that crashes the heavy gate must be
+                    # recorded as failing, never kill the session
+                    rep = testing.TestReport(passed=False, samples_run=0)
             meta: dict[str, Any] = dict(improvement=res.improvement,
                                         evals=pop.evals, chains=config.chains,
                                         exchanges=pop.exchanges)
+            if quarantine_wrap is not None:
+                meta["quarantine"] = quarantine_wrap.quarantine_stats()
             # built-kernel LRU over this round, incl. the derived hit ratio
             meta["build_cache"] = energy_mod.delta_stats(builds_before,
                                                          builds.stats())

@@ -1,0 +1,27 @@
+"""repro.ft — fault tolerance: detection, injection, and supervised recovery.
+
+* :mod:`repro.ft.manager` — transport-agnostic coordinator: heartbeats,
+  straggler detection, restart/elastic-reshape policy.
+* :mod:`repro.ft.chaos` — deterministic fault injection (seeded
+  :class:`FaultPlan` + :class:`ChaosEngine`), drivable from tests and
+  ``launch/train.py --chaos``.
+* :mod:`repro.ft.supervisor` — the loop that consumes
+  ``FTManager.decide()``: restart-from-checkpoint with bounded backoff,
+  elastic re-meshing, and non-finite-loss rollback with a data skip-window.
+* :mod:`repro.ft.errors` — the control-flow exceptions the train loop
+  raises and the supervisor catches.
+"""
+
+from repro.ft.chaos import ChaosEngine, Fault, FaultPlan
+from repro.ft.errors import (NonFiniteLossError, ReshapeRequired,
+                             RestartBudgetExhausted, RestartRequired,
+                             TrainFailure, WorkerKilled)
+from repro.ft.manager import Action, FTConfig, FTManager
+from repro.ft.supervisor import Supervisor, SupervisorConfig
+
+__all__ = [
+    "Action", "ChaosEngine", "Fault", "FaultPlan", "FTConfig", "FTManager",
+    "NonFiniteLossError", "ReshapeRequired", "RestartBudgetExhausted",
+    "RestartRequired", "Supervisor", "SupervisorConfig", "TrainFailure",
+    "WorkerKilled",
+]

@@ -35,6 +35,7 @@ class FTConfig:
     straggler_zscore: float = 3.0
     straggler_min_samples: int = 16
     max_restarts: int = 100
+    chips_per_worker: int = 8          # v5e: 8 chips per host
     # meshes we may elastically fall back to, largest first: (shape, axes)
     mesh_ladder: tuple = (
         ((2, 16, 16), ("pod", "data", "model")),
@@ -52,9 +53,12 @@ class WorkerState:
 
 
 class FTManager:
-    def __init__(self, n_workers: int, cfg: FTConfig = FTConfig(),
+    def __init__(self, n_workers: int, cfg: FTConfig | None = None,
                  clock=time.monotonic):
-        self.cfg = cfg
+        # cfg=None -> a fresh FTConfig per manager: a shared default instance
+        # would alias ladder/threshold mutations across managers (the same
+        # mutable-default bug class as TuneConfig, fixed in PR 2)
+        self.cfg = cfg if cfg is not None else FTConfig()
         self.clock = clock
         self.workers = {i: WorkerState(last_seen=clock())
                         for i in range(n_workers)}
@@ -62,6 +66,15 @@ class FTManager:
         self.events: list[dict[str, Any]] = []
 
     # ------------------------------------------------------------ heartbeats
+    def refresh(self, now: float | None = None) -> None:
+        """Reset every live worker's liveness deadline.  The supervisor
+        calls this when an attempt (re)starts: time spent in backoff or
+        checkpoint restore must not read as missed heartbeats."""
+        now = self.clock() if now is None else now
+        for w in self.workers.values():
+            if w.alive:
+                w.last_seen = now
+
     def heartbeat(self, worker: int, step_latency_s: float | None = None):
         w = self.workers[worker]
         w.last_seen = self.clock()
@@ -125,8 +138,8 @@ class FTManager:
 
     def viable_mesh(self, alive_workers: int):
         """Largest ladder mesh that fits the surviving worker count
-        (workers host 8 chips each on v5e)."""
-        chips = alive_workers * 8
+        (``cfg.chips_per_worker`` chips per host; 8 on v5e)."""
+        chips = alive_workers * self.cfg.chips_per_worker
         for shape, axes in self.cfg.mesh_ladder:
             need = math.prod(shape)
             if need <= chips:

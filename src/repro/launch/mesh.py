@@ -21,5 +21,21 @@ def make_host_mesh():
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def mesh_for(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """A mesh of exactly ``prod(shape)`` devices from this process's device
+    list.  This is the elastic-reshape seam: ``FTManager.viable_mesh`` picks
+    a (shape, axes) rung off the ladder after worker loss, and the supervisor
+    rebuilds the mesh from the devices that remain — fewer than the full
+    host/pod set, which ``jax.make_mesh`` supports via ``devices=``."""
+    need = 1
+    for s in shape:
+        need *= s
+    devs = jax.devices()
+    if need > len(devs):
+        raise ValueError(f"mesh {shape} needs {need} devices, host has "
+                         f"{len(devs)}")
+    return jax.make_mesh(shape, axes, devices=devs[:need])
+
+
 def chips(mesh) -> int:
     return mesh.devices.size

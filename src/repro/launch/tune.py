@@ -22,7 +22,8 @@ import dataclasses
 from repro import kernels, obs
 from repro.core.jit import TuneConfig
 from repro.core.registry import registry
-from repro.tuning.session import TuningSession
+from repro.tuning.session import SimulatedCrash, TuningSession
+from repro.tuning.state import state_path_for
 
 
 def _print_listing() -> None:
@@ -77,6 +78,25 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-memoize", action="store_true",
                     help="disable the shared energy cache (re-evaluate "
                          "revisited schedules)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed session from its search-state "
+                         "journal: skip completed workloads, purge + re-run "
+                         "the one that was in flight")
+    ap.add_argument("--state", default=None,
+                    help="search-state journal path (default: "
+                         "<cache>.state.json)")
+    ap.add_argument("--eval-deadline", type=float, default=None,
+                    metavar="S",
+                    help="wall-clock cap per candidate evaluation; a wedged "
+                         "or crashing schedule is quarantined and skipped, "
+                         "never fatal")
+    ap.add_argument("--keep-going", action="store_true",
+                    help="record a workload whose tuning raises as failed "
+                         "and continue with the rest of the session")
+    ap.add_argument("--die-after", type=int, default=None, metavar="N",
+                    help=f"chaos/CI: simulate a crash mid-journal after N "
+                         f"workloads (exit code {SimulatedCrash.EXIT_CODE}); "
+                         f"recover with --resume")
     ap.add_argument("--trace", default=None,
                     help="write a Chrome-trace JSON of the tuning run "
                          "(per-workload/round spans + per-chain energy "
@@ -95,7 +115,8 @@ def main(argv: list[str] | None = None) -> int:
                      final_samples=args.final_samples, step_samples=1,
                      seed=args.seed, guided=args.guided, greed=args.greed,
                      chains=args.chains, exchange_every=args.exchange_every,
-                     memoize=not args.no_memoize)
+                     memoize=not args.no_memoize,
+                     eval_deadline_s=args.eval_deadline)
     if args.smoke:
         suite = "smoke"
         # the CI gate pins the budget knobs (fast, fixed cost) but keeps
@@ -111,7 +132,10 @@ def main(argv: list[str] | None = None) -> int:
 
     # pass the path, not a ScheduleCache: the session interns it, so an
     # in-process schedule_cache(args.cache) scope shares the same store
-    session = TuningSession(cache=args.cache, config=cfg)
+    state = args.state if args.state is not None else state_path_for(args.cache)
+    session = TuningSession(cache=args.cache, config=cfg, state=state,
+                            keep_going=args.keep_going,
+                            die_after=args.die_after)
     tracer = obs.Tracer() if args.trace else None
     with contextlib.ExitStack() as stack:
         if tracer is not None:
@@ -119,15 +143,23 @@ def main(argv: list[str] | None = None) -> int:
         reg = stack.enter_context(obs.metrics_scope()) \
             if args.metrics_json else obs.active_registry()
         with obs.span("tune.session", suite=suite, seed=args.seed):
-            runs = session.run(kernels=args.kernel or None, suite=suite,
-                               verbose=True)
+            try:
+                runs = session.run(kernels=args.kernel or None, suite=suite,
+                                   verbose=True, resume=args.resume)
+            except SimulatedCrash as e:
+                print(f"[tune] {e}")
+                return SimulatedCrash.EXIT_CODE
     if tracer is not None:
         tracer.save(args.trace)
         print(f"[tune] trace written to {args.trace}")
     if args.metrics_json:
         reg.save_json(args.metrics_json)
         print(f"[tune] metrics snapshot written to {args.metrics_json}")
-    if not runs:
+    if session.failures:
+        for f in session.failures:
+            print(f"[tune] FAILED {f['kernel']} · {f['workload']}: "
+                  f"{f['error']}")
+    if not runs and not args.resume:
         raise SystemExit(f"no {suite!r} workloads matched "
                          f"{args.kernel or 'any registered kernel'}")
     print(f"[tune] {len(runs)} workload(s) tuned; schedules persisted to "

@@ -2,25 +2,39 @@
 SIP kernel-cache wiring, and metrics logging.
 
 The loop is deliberately a plain function over explicit state so that the
-FT manager can kill and relaunch it idempotently: everything it needs to
-resume is (checkpoint dir, step) — the data pipeline is stateless-resumable
-by construction (data/pipeline.py).
+supervisor (:mod:`repro.ft.supervisor`) can kill and relaunch it
+idempotently: everything it needs to resume is (checkpoint dir, step) — the
+data pipeline is stateless-resumable by construction (data/pipeline.py).
+
+Failure contract: the loop RAISES (:mod:`repro.ft.errors`) and the
+supervisor catches.  ``FTManager.decide()`` is consulted every step —
+a dead worker raises ``RestartRequired`` or ``ReshapeRequired`` (with the
+ladder target), a non-finite loss raises ``NonFiniteLossError``, and a
+chaos plan (:mod:`repro.ft.chaos`) can inject any of these
+deterministically.  Restores go through ``restore_latest`` so a corrupt
+newest checkpoint falls back to the previous verified step instead of
+killing the relaunch.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import math
 import time
-from typing import Any, Callable
+from collections import deque
+from typing import Any, Callable, Collection
 
 import jax
-import numpy as np
 
 from repro.checkpoint.ckpt import CheckpointManager
 from repro.data.pipeline import DataConfig, batch_for_model
 from repro.dist import partition
-from repro.ft.manager import FTManager
+from repro.ft.chaos import ChaosEngine
+from repro.ft.errors import (NonFiniteLossError, ReshapeRequired,
+                             RestartRequired)
+from repro.ft.manager import Action, FTManager
 from repro.launch import steps
 from repro.models import model as M
 from repro.models import modules as nn
@@ -40,6 +54,10 @@ class TrainConfig:
     num_microbatches: int = 1
     async_ckpt: bool = True
     seed: int = 0
+    # metrics history returned by train(): None keeps every step (small
+    # runs/tests); an int keeps only the newest N entries (long runs must
+    # not grow an unbounded list of per-step dicts)
+    log_history: int | None = None
 
 
 def make_train_state(mcfg: ModelConfig, mesh=None, seed: int = 0):
@@ -58,56 +76,94 @@ def make_train_state(mcfg: ModelConfig, mesh=None, seed: int = 0):
     return params, opt_state
 
 
+def _restore(ckpt: CheckpointManager, mcfg: ModelConfig, tcfg: TrainConfig,
+             mesh, params, opt_state):
+    """Newest VERIFIED checkpoint (corrupt steps are skipped, counted, and
+    fall back), resharded onto the current mesh."""
+    shardings = None
+    if mesh is not None:
+        ptree = M.init_lm_shapes(jax.random.PRNGKey(tcfg.seed), mcfg)
+        pshard = steps.param_shardings(ptree, mesh)
+        shardings = {"params": pshard,
+                     "opt": steps.opt_shardings(pshard, mesh)}
+    corrupt = obs_metrics.active_registry().counter("ft.ckpt_corrupt")
+
+    def on_corrupt(step: int) -> None:
+        corrupt.inc()
+        obs_trace.instant("ft.ckpt_corrupt", step=step)
+        print(f"[train] checkpoint step {step} failed verification; "
+              f"falling back")
+
+    step, state = ckpt.restore_latest(
+        {"params": params, "opt": opt_state}, shardings,
+        on_corrupt=on_corrupt)
+    if step is None:
+        return 0, params, opt_state
+    print(f"[train] resumed from step {step}")
+    return step, state["params"], state["opt"]
+
+
 def train(mcfg: ModelConfig, dcfg: DataConfig, tcfg: TrainConfig,
           ocfg: adamw.OptConfig = adamw.OptConfig(), *, mesh=None,
           ft: FTManager | None = None,
+          chaos: ChaosEngine | None = None,
+          skip_data_steps: Collection[int] = frozenset(),
           on_metrics: Callable[[int, dict[str, Any]], None] | None = None):
-    """Run (or resume) training to tcfg.total_steps.  Returns final metrics."""
+    """Run (or resume) training to tcfg.total_steps.  Returns final metrics.
+
+    ``skip_data_steps`` (supervisor-owned) replaces those steps' batches
+    with a disjoint deterministic substitute (data step ``s +
+    tcfg.total_steps``) — the rollback path for data-dependent non-finite
+    losses.  With ``ft`` given, every step heartbeats all workers and
+    consults ``ft.decide()``; RESTART/ELASTIC verdicts raise for the
+    supervisor to handle.
+    """
     ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep)
     params, opt_state = make_train_state(mcfg, mesh, tcfg.seed)
-
-    start_step = 0
-    latest = ckpt.latest_step()
-    if latest is not None:
-        shardings = None
-        if mesh is not None:
-            ptree = M.init_lm_shapes(jax.random.PRNGKey(tcfg.seed), mcfg)
-            pshard = steps.param_shardings(ptree, mesh)
-            shardings = {"params": pshard,
-                         "opt": steps.opt_shardings(pshard, mesh)}
-        state = ckpt.restore(latest,
-                             {"params": params, "opt": opt_state},
-                             shardings)
-        params, opt_state = state["params"], state["opt"]
-        start_step = latest
-        print(f"[train] resumed from step {latest}")
+    start_step, params, opt_state = _restore(ckpt, mcfg, tcfg, mesh,
+                                             params, opt_state)
 
     step_fn = functools.partial(steps.train_step, cfg=mcfg, opt_cfg=ocfg,
                                 num_microbatches=tcfg.num_microbatches)
     jfn = jax.jit(step_fn, donate_argnums=(0, 1))
 
-    history = []
+    history: Any = (deque(maxlen=tcfg.log_history)
+                    if tcfg.log_history is not None else [])
     reg = obs_metrics.active_registry()
     m_steps = reg.counter("train.steps")
     h_step = reg.histogram("train.step_s")
     g_loss = reg.gauge("train.loss")
-    ctx = partition.mesh_rules(mesh) if mesh is not None else _nullctx()
+    skip = frozenset(skip_data_steps)
+    ctx = (partition.mesh_rules(mesh) if mesh is not None
+           else contextlib.nullcontext())
     with ctx:
         for step in range(start_step, tcfg.total_steps):
-            batch = batch_for_model(mcfg, dcfg, step)
+            if chaos is not None:
+                chaos.on_step_start(step)      # may raise WorkerKilled
+            substituted = step in skip
+            data_step = step + tcfg.total_steps if substituted else step
+            batch = batch_for_model(mcfg, dcfg, data_step)
             t0 = time.perf_counter()
             with obs_trace.span("train.step", step=step) as sp:
                 params, opt_state, metrics = jfn(params, opt_state, batch)
                 metrics = {k: float(v) for k, v in metrics.items()}
                 sp["loss"] = metrics.get("loss")
             dt = time.perf_counter() - t0
+            loss = metrics.get("loss", 0.0)
+            if chaos is not None:
+                loss = chaos.filter_loss(step, loss, substituted=substituted)
+                metrics["loss"] = loss
+            if not math.isfinite(loss):
+                # crashing later on garbage weights is strictly worse; the
+                # supervisor rolls back to the last checkpoint and skips
+                # this step's batch
+                raise NonFiniteLossError(step, loss)
             metrics["step_s"] = dt
             m_steps.inc()
             h_step.record(dt)
-            if "loss" in metrics:
-                g_loss.set(metrics["loss"])
+            g_loss.set(loss)
             if ft is not None:
-                ft.heartbeat(0, dt)
+                _heartbeat_and_decide(ft, chaos, step, dt)
             if (step + 1) % tcfg.log_every == 0 or step == start_step:
                 print(f"[train] step {step + 1}/{tcfg.total_steps} "
                       f"loss={metrics['loss']:.4f} "
@@ -116,17 +172,39 @@ def train(mcfg: ModelConfig, dcfg: DataConfig, tcfg: TrainConfig,
                 on_metrics(step, metrics)
             history.append(metrics)
             if (step + 1) % tcfg.ckpt_every == 0 or step + 1 == tcfg.total_steps:
-                with obs_trace.span("train.checkpoint", step=step + 1):
-                    ckpt.save(step + 1, {"params": params, "opt": opt_state},
-                              blocking=not tcfg.async_ckpt)
+                with obs_trace.span("train.checkpoint", step=step + 1) as sp:
+                    sp["blocked_s"] = ckpt.save(
+                        step + 1, {"params": params, "opt": opt_state},
+                        blocking=not tcfg.async_ckpt)
+                if chaos is not None and chaos.wants_corrupt(step + 1):
+                    ckpt.wait()            # the fault hits a finished write
+                    chaos.corrupt_checkpoint(tcfg.ckpt_dir, step + 1)
     ckpt.wait()
+    history = list(history)
     return {"history": history, "params": params, "opt_state": opt_state,
+            "step": tcfg.total_steps,
             "final_loss": history[-1]["loss"] if history else float("nan")}
 
 
-class _nullctx:
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *a):
-        return False
+def _heartbeat_and_decide(ft: FTManager, chaos: ChaosEngine | None,
+                          step: int, dt: float) -> None:
+    """Feed this step's heartbeats (all workers — this single-process loop
+    stands in for the fleet) and act on the coordinator's verdict."""
+    for w in ft.workers:
+        if chaos is not None and chaos.heartbeat_suppressed(w):
+            continue
+        factor = chaos.latency_factor(w, step) if chaos is not None else 1.0
+        ft.heartbeat(w, dt * factor)
+    action, info = ft.decide()
+    if action is Action.RESTART_FROM_CKPT:
+        raise RestartRequired(f"worker(s) {info.get('dead')} died at "
+                              f"step {step}", step=step, info=info)
+    if action is Action.ELASTIC_RESHAPE:
+        raise ReshapeRequired(f"capacity lost at step {step}; reshaping "
+                              f"to {info['mesh'][0]}",
+                              target=info["mesh"], step=step, info=info)
+    if info.get("stragglers"):
+        obs_metrics.active_registry().counter("ft.stragglers").inc(
+            len(info["stragglers"]))
+        obs_trace.instant("ft.straggler", step=step,
+                          workers=len(info["stragglers"]))

@@ -1,5 +1,7 @@
 """Multi-kernel, multi-workload tuning sessions over the kernel registry."""
 
-from repro.tuning.session import TuningSession, WorkloadRun
+from repro.tuning.session import SimulatedCrash, TuningSession, WorkloadRun
+from repro.tuning.state import SearchState, state_path_for
 
-__all__ = ["TuningSession", "WorkloadRun"]
+__all__ = ["SearchState", "SimulatedCrash", "TuningSession", "WorkloadRun",
+           "state_path_for"]

@@ -125,9 +125,78 @@ def elastic():
         print(json.dumps({"identical": ok}))
 
 
+def elastic_supervised():
+    """Supervised train on a (4,2) mesh; two workers die permanently mid-run
+    → FTManager orders ELASTIC_RESHAPE onto the (2,2) ladder rung; the
+    supervisor rebuilds the mesh from the surviving devices and the restore
+    reshards every leaf.  Final loss must match the uninterrupted (4,2)
+    baseline (restarted arithmetic on a different mesh: tolerance, not
+    bit-equality)."""
+    import functools
+    import tempfile
+
+    from repro.data.pipeline import DataConfig
+    from repro.ft import (ChaosEngine, FaultPlan, FTConfig, FTManager,
+                          Supervisor)
+    from repro.launch import mesh as mesh_lib
+    from repro.models.config import ModelConfig
+    from repro.optim import adamw
+    from repro.train.loop import TrainConfig, train
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                      dtype="float32")
+    dcfg = DataConfig(global_batch=8, seq_len=16, vocab=128)
+    ocfg = adamw.OptConfig(peak_lr=1e-3, warmup_steps=2, decay_steps=12)
+    axes = ("data", "model")
+    ladder = (((4, 2), axes), ((2, 2), axes), ((1, 2), axes))
+
+    with tempfile.TemporaryDirectory() as d_base, \
+            tempfile.TemporaryDirectory() as d_chaos:
+        tcfg_b = TrainConfig(total_steps=12, ckpt_every=4, ckpt_dir=d_base,
+                             log_every=1000)
+        base = train(cfg, dcfg, tcfg_b, ocfg,
+                     mesh=mesh_lib.mesh_for((4, 2), axes))
+
+        # 4 logical workers x 2 chips; clock ticks per heartbeat so the
+        # suppressed workers time out deterministically fast
+        t = [0.0]
+        ft = FTManager(n_workers=4,
+                       cfg=FTConfig(heartbeat_timeout_s=1.0,
+                                    chips_per_worker=2, mesh_ladder=ladder),
+                       clock=lambda: t[0])
+        orig_hb = ft.heartbeat
+
+        def ticking_hb(w, lat):
+            t[0] += 0.1
+            orig_hb(w, lat)
+
+        ft.heartbeat = ticking_hb
+        chaos = ChaosEngine(FaultPlan.parse("kill@4:w2:perm,kill@4:w3:perm",
+                                            n_workers=4))
+        tcfg = TrainConfig(total_steps=12, ckpt_every=4, ckpt_dir=d_chaos,
+                           log_every=1000)
+        sup = Supervisor(
+            functools.partial(train, cfg, dcfg, tcfg, ocfg, ft=ft,
+                              chaos=chaos),
+            ft=ft, chaos=chaos, mesh=mesh_lib.mesh_for((4, 2), axes),
+            mesh_factory=lambda target: mesh_lib.mesh_for(*target),
+            sleep=lambda s: None)
+        res = sup.run()
+        s = res["supervisor"]
+        print(json.dumps({
+            "step": res["step"],
+            "final_loss": res["final_loss"],
+            "base_loss": base["final_loss"],
+            "events": [e["kind"] for e in s["events"]],
+            "final_mesh": list(s["final_mesh"][0]) if s["final_mesh"] else None,
+        }))
+
+
 if __name__ == "__main__":
     mode = sys.argv[1]
     assert len(jax.devices()) == 8, jax.devices()
     {"train_parity": train_parity,
      "compressed_psum": compressed_psum_test,
-     "elastic": elastic}[mode]()
+     "elastic": elastic,
+     "elastic_supervised": elastic_supervised}[mode]()

@@ -112,10 +112,13 @@ class TestGuidedFlagWiring:
         seen = {}
 
         class FakeSession:
-            def __init__(self, cache=None, config=None):
+            failures: list = []
+
+            def __init__(self, cache=None, config=None, **kw):
                 seen["cfg"] = config
 
-            def run(self, kernels=None, suite="default", verbose=False):
+            def run(self, kernels=None, suite="default", verbose=False,
+                    resume=False):
                 return [object()]
 
         monkeypatch.setattr(tune, "TuningSession", FakeSession)

@@ -42,6 +42,17 @@ class TestShardedExecution:
         r = run_subproc("elastic")
         assert r["identical"] is True, r
 
+    def test_supervised_elastic_reshape_finishes_near_baseline(self):
+        """Permanent loss of half the workers mid-run: the supervisor must
+        reshape onto the (2,2) ladder mesh, reshard the restore, and finish
+        with (near-)baseline final loss — the elastic differential gate."""
+        r = run_subproc("elastic_supervised")
+        assert r["step"] == 12, r
+        assert "elastic_reshape" in r["events"], r
+        assert r["final_mesh"] == [2, 2], r
+        assert abs(r["final_loss"] - r["base_loss"]) < 5e-3 * abs(
+            r["base_loss"]), r
+
 
 class TestPartitionRules:
     def test_resolve_spec_rules(self):

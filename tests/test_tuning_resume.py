@@ -1,0 +1,283 @@
+"""Crash-safe tuning: the search-state journal, killed-and-resumed session
+convergence (resumed cache == uninterrupted cache, byte-identical), the
+per-candidate deadline/quarantine wrapper, and keep-going error tolerance."""
+
+import json
+import threading
+import time
+
+import pytest
+
+from repro import kernels
+from repro.core import ScheduleCache, TuneConfig, registry, workload_seed
+from repro.core.energy import FAILED, QuarantineEnergy
+from repro.core.registry import KernelRegistry, Workload
+from repro.core.schedule import Schedule
+from repro.tuning import (SearchState, SimulatedCrash, TuningSession,
+                          state_path_for)
+
+kernels.load_all()
+
+GEMM = "gemm_fused_leaky_relu"
+RMS = "rmsnorm_fused"
+QUICK = TuneConfig(rounds=1, t_min=0.3, cooling=1.3, step_samples=1,
+                   final_samples=4)
+
+
+class TestSearchState:
+    def test_roundtrip(self, tmp_path):
+        p = str(tmp_path / "s.state.json")
+        st = SearchState(path=p, fingerprint={"suite": "smoke"})
+        st.mark_in_progress("k", "w", "sig0")
+        st.mark_completed("k", "w", signature="sig0", seed=7, best_energy=1.5)
+        st.mark_in_progress("k", "w2", "sig2")
+        st.save_quarantine("k", "w2", {"bad1", "bad2"})
+        st2 = SearchState.load(p)
+        assert st2.fingerprint == {"suite": "smoke"}
+        assert st2.completed_keys() == {("k", "w")}
+        assert st2.stale_in_progress("k", "w2") == {
+            "kernel": "k", "workload": "w2", "signature": "sig2"}
+        assert st2.stale_in_progress("k", "other") is None
+        assert st2.quarantine_for("k", "w2") == {"bad1", "bad2"}
+        assert st2.quarantine_for("k", "w") == set()
+
+    def test_mark_failed_clears_in_progress(self, tmp_path):
+        p = str(tmp_path / "s.state.json")
+        st = SearchState(path=p)
+        st.mark_in_progress("k", "w", "sig")
+        st.mark_failed("k", "w", "boom")
+        st2 = SearchState.load(p)
+        assert st2.in_progress is None
+        assert st2.failed == [{"kernel": "k", "workload": "w",
+                               "error": "boom"}]
+
+    def test_unreadable_or_wrong_version_loads_none(self, tmp_path):
+        missing = SearchState.load(str(tmp_path / "nope.json"))
+        assert missing is None
+        garbled = tmp_path / "bad.json"
+        garbled.write_text("{not json")
+        assert SearchState.load(str(garbled)) is None
+        old = tmp_path / "old.json"
+        old.write_text(json.dumps({"version": -1}))
+        assert SearchState.load(str(old)) is None
+
+    def test_default_path_sits_next_to_cache(self):
+        assert state_path_for("/x/cache.json") == "/x/cache.json.state.json"
+
+
+class TestQuarantineEnergy:
+    def test_crash_is_quarantined_and_skipped(self):
+        calls = []
+
+        def bomb(s):
+            calls.append(s)
+            raise RuntimeError("segfault stand-in")
+
+        seen = []
+        q = QuarantineEnergy(bomb, on_quarantine=lambda sig, msg:
+                             seen.append((sig, msg)))
+        s = Schedule()
+        assert q(s) == FAILED
+        assert q(s) == FAILED              # second call answered from the list
+        assert len(calls) == 1
+        assert q.quarantine_stats() == {"timeouts": 0, "crashes": 1,
+                                        "skips": 1, "quarantined": 1}
+        assert seen[0][0] == s.signature()
+        assert "segfault stand-in" in seen[0][1]
+
+    def test_deadline_times_out_wedged_evaluation(self):
+        release = threading.Event()
+
+        def wedged(s):
+            release.wait(5.0)              # simulates a hung compile
+            return 1.0
+
+        q = QuarantineEnergy(wedged, deadline_s=0.1)
+        t0 = time.perf_counter()
+        assert q(Schedule()) == FAILED
+        assert time.perf_counter() - t0 < 2.0
+        assert q.quarantine_stats()["timeouts"] == 1
+        release.set()
+
+    def test_fresh_worker_after_timeout(self):
+        """One wedged schedule costs one deadline, not the session: the
+        next evaluation runs on a fresh worker and succeeds."""
+        bad = Schedule(knobs={"wedge": True})
+        ok = Schedule(knobs={"wedge": False})
+        assert bad.signature() != ok.signature()
+
+        def energy(s):
+            if s.signature() == bad.signature():
+                time.sleep(5.0)
+            return 0.25
+
+        q = QuarantineEnergy(energy, deadline_s=0.1)
+        assert q(bad) == FAILED
+        assert q(ok) == 0.25
+        assert q.quarantine_stats() == {"timeouts": 1, "crashes": 0,
+                                        "skips": 0, "quarantined": 1}
+
+    def test_passthrough_without_deadline(self):
+        q = QuarantineEnergy(lambda s: 0.5)
+        assert q(Schedule()) == 0.5
+        assert q._pool is None             # no thread machinery engaged
+
+    def test_caller_owned_quarantine_preloads_skips(self):
+        s = Schedule()
+        q = QuarantineEnergy(lambda s: 0.5, quarantine={s.signature()})
+        assert q(s) == FAILED
+        assert q.quarantine_stats()["skips"] == 1
+
+    def test_invalid_deadline_rejected(self):
+        with pytest.raises(ValueError, match="deadline_s"):
+            QuarantineEnergy(lambda s: 0.5, deadline_s=0.0)
+        with pytest.raises(ValueError, match="eval_deadline_s"):
+            TuneConfig(eval_deadline_s=-1.0).validate()
+
+
+def _cache_bytes(path):
+    return (json.dumps(json.loads(path.read_text()), sort_keys=True)
+            if path.exists() else None)
+
+
+class TestSessionResume:
+    def test_killed_then_resumed_equals_uninterrupted(self, tmp_path):
+        """THE crash-safe acceptance gate: a session killed mid-journal
+        (entries written, completion not recorded) and resumed must produce
+        a byte-identical ScheduleCache to an uninterrupted session."""
+        base = tmp_path / "base.json"
+        TuningSession(cache=str(base), config=QUICK,
+                      state=str(tmp_path / "base.state.json")).run(
+            kernels=[GEMM, RMS], suite="smoke")
+
+        crashy = tmp_path / "crashy.json"
+        state = str(tmp_path / "crashy.state.json")
+        with pytest.raises(SimulatedCrash):
+            TuningSession(cache=str(crashy), config=QUICK, state=state,
+                          die_after=1).run(kernels=[GEMM, RMS], suite="smoke")
+        # torn state on disk: first workload's entries written, journal
+        # still says in_progress
+        st = SearchState.load(state)
+        assert st.in_progress is not None
+        assert st.completed == []
+
+        resumed = TuningSession(cache=str(crashy), config=QUICK,
+                                state=state).run(kernels=[GEMM, RMS],
+                                                 suite="smoke", resume=True)
+        assert len(resumed) == 2           # purge + rerun first, then second
+        assert _cache_bytes(crashy) == _cache_bytes(base)
+        st = SearchState.load(state)
+        assert st.in_progress is None
+        assert st.completed_keys() == {(GEMM, r.workload) if r.kernel == GEMM
+                                       else (RMS, r.workload)
+                                       for r in resumed}
+
+    def test_resume_skips_completed_workloads(self, tmp_path):
+        cache = tmp_path / "c.json"
+        state = str(tmp_path / "c.state.json")
+        first = TuningSession(cache=str(cache), config=QUICK,
+                              state=state).run(kernels=[RMS], suite="smoke")
+        assert len(first) == 1
+        again = TuningSession(cache=str(cache), config=QUICK,
+                              state=state).run(kernels=[RMS], suite="smoke",
+                                               resume=True)
+        assert again == []                 # nothing left to do
+
+    def test_fingerprint_mismatch_warns_and_restarts(self, tmp_path):
+        cache = tmp_path / "c.json"
+        state = str(tmp_path / "c.state.json")
+        TuningSession(cache=str(cache), config=QUICK, state=state).run(
+            kernels=[RMS], suite="smoke")
+        other = TuningSession(cache=str(cache),
+                              config=QUICK, state=state)
+        with pytest.warns(RuntimeWarning, match="fingerprint"):
+            rerun = other.run(kernels=[GEMM], suite="smoke", resume=True)
+        assert len(rerun) == 1 and rerun[0].kernel == GEMM
+
+    def test_stale_in_progress_purges_partial_entries(self, tmp_path):
+        """Partial cache rounds of the workload that was in flight when the
+        session died must be dropped before the re-run (otherwise the
+        resumed store holds duplicate rounds the uninterrupted run lacks)."""
+        cache_path = tmp_path / "c.json"
+        state = str(tmp_path / "c.state.json")
+        with pytest.raises(SimulatedCrash):
+            TuningSession(cache=str(cache_path), config=QUICK, state=state,
+                          die_after=1).run(kernels=[RMS], suite="smoke")
+        partial = json.loads(cache_path.read_text())
+        assert partial                     # torn: entries exist pre-resume
+        resumed = TuningSession(cache=str(cache_path), config=QUICK,
+                                state=state)
+        runs = resumed.run(kernels=[RMS], suite="smoke", resume=True)
+        assert len(runs) == 1
+        final = json.loads(cache_path.read_text())
+        for key in final:                  # same rounds, not doubled ones
+            assert len(final[key]) == len(partial[key])
+
+    def test_quarantine_persists_into_journal(self, tmp_path):
+        state_p = str(tmp_path / "s.state.json")
+        st = SearchState(path=state_p)
+        st.save_quarantine(RMS, "w", {"sig-of-known-bad"})
+        sess = TuningSession(cache=str(tmp_path / "c.json"), config=QUICK,
+                             state=st)
+        assert sess.state.quarantine_for(RMS, "w") == {"sig-of-known-bad"}
+
+
+class TestKeepGoing:
+    def _registry_with_broken_kernel(self):
+        reg = KernelRegistry()
+
+        class _BoomSpec:
+            name = "boom"
+            module = "tests.boom"
+
+            def workloads_in(self, suite):
+                return (Workload("w", lambda rng: [], suites=(suite,)),)
+
+            def instantiate(self, cache=None):
+                raise RuntimeError("driver fell over")
+
+        good = registry.spec(RMS)
+
+        class _Reg:
+            def names(self):
+                return ["boom", RMS]
+
+            def spec(self, name):
+                return {"boom": _BoomSpec(), RMS: good}[name]
+
+        return _Reg()
+
+    def test_keep_going_records_failure_and_continues(self, tmp_path):
+        state = str(tmp_path / "s.state.json")
+        sess = TuningSession(cache=str(tmp_path / "c.json"), config=QUICK,
+                             registry_=self._registry_with_broken_kernel(),
+                             state=state, keep_going=True)
+        runs = sess.run(suite="smoke")
+        assert [r.kernel for r in runs] == [RMS]   # survivor still tuned
+        assert sess.failures[0]["kernel"] == "boom"
+        assert "driver fell over" in sess.failures[0]["error"]
+        st = SearchState.load(state)
+        assert st.failed[0]["kernel"] == "boom"
+        assert st.in_progress is None
+
+    def test_without_keep_going_failure_is_fatal(self, tmp_path):
+        sess = TuningSession(cache=str(tmp_path / "c.json"), config=QUICK,
+                             registry_=self._registry_with_broken_kernel())
+        with pytest.raises(RuntimeError, match="driver fell over"):
+            sess.run(suite="smoke")
+
+
+class TestTuneCLIResume:
+    def test_die_after_exit_code_then_resume_converges(self, tmp_path):
+        from repro.launch import tune
+        base = tmp_path / "base.json"
+        assert tune.main(["--smoke", "--kernel", GEMM, "--kernel", RMS,
+                          "--cache", str(base)]) == 0
+
+        crashy = tmp_path / "crashy.json"
+        argv = ["--smoke", "--kernel", GEMM, "--kernel", RMS,
+                "--cache", str(crashy)]
+        assert tune.main(argv + ["--die-after", "1"]) == \
+            SimulatedCrash.EXIT_CODE
+        assert tune.main(argv + ["--resume"]) == 0
+        assert _cache_bytes(crashy) == _cache_bytes(base)
