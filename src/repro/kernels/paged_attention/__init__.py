@@ -1,0 +1,3 @@
+"""Paged-attention cache gather: page-table-indirect KV reads as a
+SIP-tunable Pallas kernel (kernel.py), its dense-gather oracle (ref.py),
+and the registry integration (ops.py)."""

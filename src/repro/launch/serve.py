@@ -24,6 +24,11 @@ registry's ``schedule_cache`` scope, so the model's kernel paths resolve
 SIP-tuned schedules from the store ``repro.launch.tune`` persisted.
 ``--static`` runs the same stream through the static-batch baseline engine
 for comparison.
+
+``--paged`` serves from the paged KV cache (``repro.serve.pages``): add
+``--page-size``/``--num-pages`` to set the pool, ``--prefill-chunk N`` to
+interleave long-prompt prefill with decode, ``--no-prefix-cache`` /
+``--admission`` to tune sharing and overload policy.
 """
 
 from __future__ import annotations
@@ -170,6 +175,24 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--static", action="store_true",
                     help="run the static-batch baseline engine instead")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from a paged KV cache (repro.serve.pages) "
+                         "instead of per-slot contiguous segments")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV cache page (with --paged)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page budget incl. the trash page (0 = contiguous-"
+                         "equivalent memory: capacity*ceil(max_len/ps)+1)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill size (0 = whole-prompt prefills); "
+                         "with --paged only")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable content-hashed prefix sharing (with "
+                         "--paged)")
+    ap.add_argument("--admission", choices=("queue", "reject"),
+                    default="queue",
+                    help="paged admission policy when pages/slots are "
+                         "unavailable at submit time")
     ap.add_argument("--use-pallas", action="store_true",
                     help="route fwd-only paths through SIP-tuned kernels")
     ap.add_argument("--sip-cache", default=None,
@@ -189,7 +212,12 @@ def main() -> None:
     max_len = (max(t.prompt_len for t in traffic)
                + max(t.new_tokens for t in traffic))
     scfg = ServeConfig(max_len=max_len, temperature=args.temperature,
-                       capacity=args.capacity, seed=args.seed)
+                       capacity=args.capacity, seed=args.seed,
+                       paged=args.paged, page_size=args.page_size,
+                       num_pages=args.num_pages or None,
+                       prefill_chunk=args.prefill_chunk or None,
+                       prefix_cache=not args.no_prefix_cache,
+                       admission=args.admission)
     prompts = [rng.integers(0, cfg.vocab, t.prompt_len).astype(np.int32)
                for t in traffic]
     extras = None

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.dist.partition import shard
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.paged_attention import ops as pg_ops
 from repro.models import modules as nn
 from repro.models.config import ModelConfig
 
@@ -184,7 +185,10 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
     kv_idx = kv_head_map(cfg)
 
     new_cache = None
-    if cache is not None:                       # decode: append to cache
+    if cache is not None and "pt" in cache:     # paged decode / chunk prefill
+        o, new_cache = _paged_decode(cache, q, k, v, cfg, causal=causal,
+                                     kv_idx=kv_idx)
+    elif cache is not None:                     # decode: append to cache
         idx = cache["len"]
         size = cache["k"].shape[1]
         # SWA ring buffer: slot(p) = p % size once the cache is window-sized
@@ -224,6 +228,67 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
     if return_cache or cache is not None:
         return out, new_cache
     return out
+
+
+def _paged_decode(cache: dict[str, Any], q, k, v, cfg: ModelConfig, *,
+                  causal: bool, kv_idx):
+    """Page-table-indirect cache write + read (continuous batching over a
+    paged KV store).
+
+    ``cache`` holds the flat page stores ``k``/``v`` (P, ps, Hkv, D), the
+    per-slot lengths ``len`` (B,), and routing keys the model layer injects
+    per step: ``pt`` (B, n_pages) int32 page tables, optional ``active``
+    (B,) bool (rows mid-chunked-prefill or idle write to the trash page and
+    do not advance), optional ``n_valid`` scalar (chunked prefill: how many
+    of the s positions are real tokens — padding still writes, but beyond
+    ``len + n_valid`` positions are never read because the engine reserves
+    worst-case pages per slot and reads are bounded by ``len``).
+
+    Writes scatter each token at (pt[b, pos // ps], pos % ps); reads gather
+    the slot's pages back into a contiguous (B, n*ps, Hkv, D) view (the
+    SIP-tuned ``paged_gather`` kernel under ``cfg.use_pallas``) and reuse
+    the per-slot masked SDPA unchanged.  Sliding-window archs keep the
+    dense ring buffer (the engine gates paging to window=None families).
+    """
+    store_k, store_v, idx = cache["k"], cache["v"], cache["len"]
+    pt = cache["pt"]
+    active = cache.get("active")
+    n_valid = cache.get("n_valid")
+    b, s = q.shape[0], q.shape[1]
+    ps = store_k.shape[1]
+    n_pages = pt.shape[1]
+
+    pos = idx[:, None] + jnp.arange(s)[None, :]            # (B, S) absolute
+    # clamp for overflowing rows (finished slots whose stale len keeps
+    # advancing); their page-table rows are all-trash so the write is inert
+    page_slot = jnp.minimum(pos // ps, n_pages - 1)
+    page_ids = jnp.take_along_axis(pt, page_slot, axis=1)  # (B, S)
+    if active is not None:
+        page_ids = jnp.where(active[:, None], page_ids, 0)  # trash page
+    offs = pos % ps
+    ck = store_k.at[page_ids, offs].set(k.astype(store_k.dtype))
+    cv = store_v.at[page_ids, offs].set(v.astype(store_v.dtype))
+
+    gk = _gather_pages(ck, pt, cfg)                        # (B, n*ps, Hkv, D)
+    gv = _gather_pages(cv, pt, cfg)
+    o = _sdpa(q, gk, gv, causal=causal, window=None,
+              kv_len=idx + s, kv_idx=kv_idx)
+
+    adv = s if n_valid is None else n_valid
+    if active is not None:
+        adv = jnp.where(active, adv, 0)
+    return o, {"k": ck, "v": cv, "len": idx + adv}
+
+
+def _gather_pages(store, pt, cfg: ModelConfig):
+    """(P, ps, H, D) store + (B, n) page table -> contiguous (B, n*ps, H, D)
+    per-slot KV view; the SIP-registered kernel when ``cfg.use_pallas``."""
+    if cfg.use_pallas:
+        pages = pg_ops.paged_gather(store, pt)
+    else:
+        pages = jnp.take(store, pt, axis=0)
+    b, n, ps, h, d = pages.shape
+    return pages.reshape(b, n * ps, h, d)
 
 
 def cross_attention(p, x: jnp.ndarray, ctx_kv: tuple[jnp.ndarray, jnp.ndarray],

@@ -330,22 +330,29 @@ def _prefill_enc_dec(p, inputs, cfg: ModelConfig, max_len: int):
                     "cross": cross_kvs}
 
 
-def decode_step(p: Params, caches, tokens: jnp.ndarray, cfg: ModelConfig):
-    """One decode step.  tokens: (B,) int32 -> (logits (B, vocab), caches)."""
+def decode_step(p: Params, caches, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                pt: jnp.ndarray | None = None,
+                active: jnp.ndarray | None = None):
+    """One decode step.  tokens: (B,) int32 -> (logits (B, vocab), caches).
+
+    ``pt`` (B, n_pages) routes attention-family cache traffic through a paged
+    store (see :func:`alloc_paged_caches`); ``active`` (B,) masks rows that
+    must neither write real pages nor advance (idle slots, slots mid
+    chunked-prefill) — their scatters land in the trash page."""
     dt = jnp.dtype(cfg.dtype)
     if cfg.family == "enc_dec":
         return _decode_enc_dec(p, caches, tokens, cfg)
+    if cfg.family in ("dense", "moe", "vlm"):
+        logits, caches = decode_tokens(p, caches, tokens[:, None], cfg,
+                                       pt=pt, active=active)
+        return logits[:, 0], caches
+    if pt is not None:
+        raise ValueError(f"paged decode supports attention families "
+                         f"(dense/moe/vlm), not {cfg.family!r}")
     x = p["embed"].astype(dt)[tokens][:, None, :]       # (B, 1, d)
     x = shard(x, "batch", "seq", None)
 
-    if cfg.family in ("dense", "moe", "vlm"):
-        def body(h, xs):
-            lp, cache = xs
-            h, _, cache = blocks.decoder_block(
-                lp, h, cfg, causal=True, pos_offset=cache["len"], cache=cache)
-            return h, cache
-        x, caches = _scan(body, x, (p["blocks"], caches), cfg)
-    elif cfg.family == "ssm":
+    if cfg.family == "ssm":
         def body(h, xs):
             lp, st = xs
             h, st = blocks.mamba_block(lp, h, cfg, state=st)
@@ -358,6 +365,55 @@ def decode_step(p: Params, caches, tokens: jnp.ndarray, cfg: ModelConfig):
 
     x = nn.rmsnorm_apply(p["ln_f"], x)
     logits = (x @ p["lm_head"].astype(x.dtype))[:, 0]
+    return logits, caches
+
+
+def decode_tokens(p: Params, caches, tokens: jnp.ndarray, cfg: ModelConfig, *,
+                  pt: jnp.ndarray | None = None,
+                  active: jnp.ndarray | None = None,
+                  n_valid: jnp.ndarray | None = None,
+                  embeds: jnp.ndarray | None = None):
+    """Cache-advancing forward over ``tokens`` (B, S) for the attention
+    families -> (logits (B, S, vocab), caches).
+
+    The S == 1 case is the lockstep decode step; S > 1 is a *chunked
+    prefill* step (a prompt chunk pushed through the decode path, so long
+    prompts interleave with decode instead of stalling the batch).  The
+    paged-cache routing keys are injected into each layer's cache dict and
+    consumed (and stripped) by ``attention.py``'s paged branch:
+
+    * ``pt`` (B, n_pages) int32 — per-slot page tables over the page store;
+    * ``active`` (B,) bool — rows that may write real pages and advance;
+    * ``n_valid`` scalar — how many of the S positions are real (a padded
+      final chunk advances ``len`` by n_valid and its logits are read at
+      position n_valid - 1).
+
+    ``embeds`` (B, S, d) replaces the token embedding lookup for
+    embedding-prompt (VLM) chunks.
+    """
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"decode_tokens supports attention families "
+                         f"(dense/moe/vlm), not {cfg.family!r}")
+    dt = jnp.dtype(cfg.dtype)
+    x = embeds.astype(dt) if embeds is not None \
+        else p["embed"].astype(dt)[tokens]              # (B, S, d)
+    x = shard(x, "batch", "seq", None)
+
+    def body(h, xs):
+        lp, cache = xs
+        if pt is not None:
+            cache = dict(cache, pt=pt)
+            if active is not None:
+                cache["active"] = active
+            if n_valid is not None:
+                cache["n_valid"] = n_valid
+        h, _, cache = blocks.decoder_block(
+            lp, h, cfg, causal=True, pos_offset=cache["len"], cache=cache)
+        return h, cache
+
+    x, caches = _scan(body, x, (p["blocks"], caches), cfg)
+    x = nn.rmsnorm_apply(p["ln_f"], x)
+    logits = x @ p["lm_head"].astype(x.dtype)
     return logits, caches
 
 
@@ -497,6 +553,166 @@ def evict_slot(caches, slot, axes):
                                                    axis=leaf.ndim - 1)
 
     return jax.tree.map(ev, caches, axes)
+
+
+# ================================================== paged caches (serve/pages)
+# Paged serving memory: instead of per-slot contiguous max_len segments, the
+# KV leaves become flat page stores (L, P, page_size, H, D) indexed through
+# per-slot page tables ((B, n_pages) int32 rows the engine owns host-side and
+# passes into every decode/chunk step).  Which leaves page is discovered
+# STRUCTURALLY, like the batch axes above: a leaf pages iff its shape depends
+# on max_len (KV caches do; SSM conv/ssm states and cross-attention context
+# do not — those families keep dense per-slot segments and the engine gates
+# paging to attention families).
+
+#: sentinel axis for leaves stored as (L, num_pages, page_size, ...) pages
+PAGED_AXIS = -2
+
+
+def paged_cache_axes(p: Params, cfg: ModelConfig, max_len: int,
+                     page_size: int,
+                     example_inputs: dict[str, jnp.ndarray]):
+    """Per-leaf paging/batch markers for the decode-cache pytree:
+    :data:`PAGED_AXIS` for max_len-dependent (pageable) leaves, otherwise the
+    leaf's batch axis exactly as :func:`slot_cache_axes` reports it."""
+    baxes = slot_cache_axes(p, cfg, max_len, example_inputs)
+    a = _cache_shapes(p, cfg, max_len, 1, example_inputs)
+    b = _cache_shapes(p, cfg, max_len + page_size, 1, example_inputs)
+
+    def mark(sa, sb, bax):
+        diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                if x != y]
+        if not diff:
+            return bax
+        assert len(diff) == 1, f"ambiguous seq axis for {sa.shape}"
+        # the paged layout assumes the canonical stacked-KV leaf
+        # (layers, batch, seq, heads, head_dim)
+        assert (bax, diff[0]) == (1, 2) and len(sa.shape) == 5, \
+            f"unpageable cache leaf {sa.shape} (batch={bax}, seq={diff[0]})"
+        return PAGED_AXIS
+
+    return jax.tree.map(mark, a, b, baxes)
+
+
+def alloc_paged_caches(p: Params, cfg: ModelConfig, capacity: int,
+                       max_len: int, page_size: int, num_pages: int,
+                       example_inputs: dict[str, jnp.ndarray]):
+    """Zero-initialized paged decode caches.
+
+    Pageable leaves become (L, num_pages, page_size, H, D) stores shared by
+    every slot (page ids are layer-invariant: a slot's page holds that page's
+    positions in every layer).  Non-pageable leaves allocate exactly like
+    :func:`alloc_slot_caches` — shared leaves (per-layer ``len``) gain a
+    trailing slot axis.  Returns ``(caches, axes)``.
+    """
+    if cfg.window is not None:
+        raise ValueError("paged caches are incompatible with sliding-window "
+                         "ring buffers (cfg.window)")
+    axes = paged_cache_axes(p, cfg, max_len, page_size, example_inputs)
+    # evaluated at max_len == page_size, a pageable leaf's shape IS one
+    # page's shape with the batch axis in page-id position
+    shapes = _cache_shapes(p, cfg, page_size, 1, example_inputs)
+
+    def alloc(leaf, ax):
+        if ax == PAGED_AXIS:
+            shp = list(leaf.shape)
+            shp[1] = num_pages
+            return jnp.zeros(shp, leaf.dtype)
+        if ax == SLOT_AXIS_SHARED:
+            return jnp.zeros(leaf.shape + (capacity,), leaf.dtype)
+        shp = list(leaf.shape)
+        shp[ax] = capacity
+        return jnp.zeros(shp, leaf.dtype)
+
+    return jax.tree.map(alloc, shapes, axes), axes
+
+
+def insert_pages(caches, group_caches, slots, pages, axes):
+    """Splice a batch-G prefill cache (built at max_len rounded up to a page
+    multiple, so its seq extent is ``n_pg * page_size``) into the page store:
+    one scatter per pageable leaf at the groups' page ids ``pages``
+    ((G, n_pg) int32), plus the usual per-slot scatter for everything else.
+    """
+    g = slots.shape[0]
+    flat_pages = jnp.reshape(pages, (-1,))
+
+    def ins(leaf, grp, ax):
+        grp = jnp.asarray(grp).astype(leaf.dtype)
+        if ax == PAGED_AXIS:
+            l, _, r, h, hd = grp.shape            # (L, G, n_pg*ps, H, D)
+            ps = leaf.shape[2]
+            content = grp.reshape(l, g * (r // ps), ps, h, hd)
+            return leaf.at[:, flat_pages].set(content)
+        if ax == SLOT_AXIS_SHARED:
+            tiled = jnp.broadcast_to(grp[..., None], grp.shape + (g,))
+            return leaf.at[..., slots].set(tiled)
+        moved = jnp.moveaxis(leaf, ax, 0)
+        moved = moved.at[slots].set(jnp.moveaxis(grp, ax, 0))
+        return jnp.moveaxis(moved, 0, ax)
+
+    return jax.tree.map(ins, caches, group_caches, axes)
+
+
+def set_slot_lens(caches, slot, value, axes):
+    """Set slot ``slot``'s cache-position leaves to ``value`` (prefix-cache
+    hits start a slot at the shared-prefix length without any KV traffic)."""
+    def st(leaf, ax):
+        if ax != SLOT_AXIS_SHARED:
+            return leaf
+        return leaf.at[..., slot].set(jnp.asarray(value, leaf.dtype))
+
+    return jax.tree.map(st, caches, axes)
+
+
+def slot_view(caches, slot, axes):
+    """A batch-1 view of one slot: per-slot leaves sliced at ``slot`` (a
+    traced scalar is fine), page stores passed through whole — chunked
+    prefill runs a single slot without dragging the full batch through the
+    compute."""
+    def ex(leaf, ax):
+        if ax == PAGED_AXIS:
+            return leaf
+        if ax == SLOT_AXIS_SHARED:
+            return jax.lax.dynamic_slice_in_dim(leaf, slot, 1,
+                                                axis=leaf.ndim - 1)
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+
+    return jax.tree.map(ex, caches, axes)
+
+
+def merge_slot(caches, view, slot, axes):
+    """Write a :func:`slot_view` back: page stores replace wholesale (their
+    writes already landed at absolute page ids), per-slot leaves scatter at
+    ``slot``."""
+    def mg(leaf, sub, ax):
+        if ax == PAGED_AXIS:
+            return sub
+        if ax == SLOT_AXIS_SHARED:
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, sub.astype(leaf.dtype), slot, axis=leaf.ndim - 1)
+        return jax.lax.dynamic_update_slice_in_dim(
+            leaf, sub.astype(leaf.dtype), slot, axis=ax)
+
+    return jax.tree.map(mg, caches, view, axes)
+
+
+def prefill_chunk(p: Params, caches, tokens: jnp.ndarray,
+                  pt_row: jnp.ndarray, slot, n_valid, cfg: ModelConfig,
+                  axes, embeds: jnp.ndarray | None = None):
+    """One chunked-prefill step for one slot over the paged cache.
+
+    ``tokens`` (1, chunk) is the next prompt chunk (zero-padded past
+    ``n_valid`` on the final chunk — the fixed chunk shape is what bounds
+    prefill recompilation to the number of chunk sizes, not prompt lengths);
+    ``pt_row`` (1, n_pages) is the slot's page table.  Returns the logits at
+    the last valid position ((1, vocab) — only meaningful on the final
+    chunk) and the updated caches.
+    """
+    view = slot_view(caches, slot, axes)
+    logits, view = decode_tokens(p, view, tokens, cfg, pt=pt_row,
+                                 n_valid=n_valid, embeds=embeds)
+    last = jax.lax.dynamic_slice_in_dim(logits, n_valid - 1, 1, axis=1)[:, 0]
+    return last, merge_slot(caches, view, slot, axes)
 
 
 def _decode_enc_dec(p, caches, tokens, cfg: ModelConfig):

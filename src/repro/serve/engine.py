@@ -19,6 +19,16 @@ serving directly):
   metrics registry, prefill/decode spans on the active tracer, and an
   optional live-workload recorder (see :class:`ContinuousEngine`).
 
+  With ``ServeConfig(paged=True)`` the continuous engine swaps the per-slot
+  contiguous cache segments for a paged KV store (``repro.serve.pages``):
+  attention cache traffic goes through per-slot page tables over a shared
+  page pool, admission reserves worst-case pages up front (decode never
+  allocates), identical prompt prefixes share pages read-only through a
+  content-hashed prefix cache, and long prompts optionally prefill in
+  fixed-size chunks interleaved with decode (``prefill_chunk``).  Greedy
+  outputs stay token-identical to the static reference engine —
+  tests/test_serve_paged.py holds every paged mode to that.
+
 Kernel resolution happens at trace time, so wrap serving in
 ``repro.core.registry.schedule_cache(path)`` to serve SIP-tuned schedules on
 the hot path (see launch/serve.py).  Registry handles are late-binding: a
@@ -28,6 +38,7 @@ scope entered before engine construction is honored, and tuning that bumps
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import time
@@ -42,7 +53,13 @@ from repro.models.config import ModelConfig
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.recorder import WorkloadRecorder
+from repro.serve.pages import PagePool, PagesExhausted, PrefixCache
 from repro.serve.slots import SlotPool
+
+#: paged serving supports the attention families; SSM/hybrid conv+state
+#: caches and enc-dec cross context are dense per-slot state, and SWA ring
+#: buffers already bound cache size by the window
+PAGED_FAMILIES = ("dense", "moe", "vlm")
 
 
 @dataclasses.dataclass
@@ -51,6 +68,22 @@ class ServeConfig:
     temperature: float = 0.0        # 0 = greedy
     seed: int = 0
     capacity: int = 8               # decode-batch slots (ContinuousEngine)
+    # ---- paged KV cache (ContinuousEngine; see repro.serve.pages) --------
+    paged: bool = False             # page the KV store instead of per-slot
+                                    # contiguous max_len segments
+    page_size: int = 16             # tokens per cache page
+    num_pages: int | None = None    # page budget incl. the trash page;
+                                    # None = capacity * ceil(max_len/page_size)
+                                    # + 1 (contiguous-equivalent memory)
+    prefill_chunk: int | None = None  # split prompts longer than this into
+                                    # fixed-size chunks interleaved with
+                                    # decode (bounds TTFT under long arrivals
+                                    # AND prefill recompiles); None = whole-
+                                    # prompt prefill dispatches
+    prefix_cache: bool = True       # content-hashed prefix sharing (paged)
+    admission: str = "queue"        # "queue": wait for pages/slots;
+                                    # "reject": submit raises PagesExhausted
+                                    # unless the request can start NOW
 
 
 class Engine:
@@ -152,7 +185,26 @@ class Request:
 #: the engine's cumulative counters; ``stats`` assembles them in this order
 _STAT_KEYS = ("prefill_s", "decode_s", "tokens_out", "prefill_tokens",
               "submitted", "admitted", "completed", "steps", "decode_steps",
-              "occupancy_sum", "queue_depth_sum", "prefill_compiles")
+              "occupancy_sum", "queue_depth_sum", "prefill_compiles",
+              "prefix_hits", "prefix_tokens_saved", "chunk_steps")
+
+
+@dataclasses.dataclass
+class _ChunkTask:
+    """A slot mid chunked-prefill: the first ``pos`` prompt tokens are
+    already in its pages (shared-prefix pages and/or completed chunks)."""
+
+    req: Request
+    slot: int
+    pos: int
+
+
+def _shape_key(req: Request) -> tuple:
+    """Prefill-coalescing key: requests with equal keys compile and batch
+    together."""
+    return (len(req.prompt),
+            tuple(sorted((k, np.asarray(v).shape)
+                         for k, v in (req.extra or {}).items())))
 
 
 def _ratio(num: float, den: float) -> float:
@@ -208,27 +260,77 @@ class ContinuousEngine:
                 {k: np.asarray(v)[None] for k, v in example_extra.items()})
         self._example_extra_shapes = {
             k: tuple(np.asarray(v).shape) for k, v in (example_extra or {}).items()}
-        self.caches, self._axes = M.alloc_slot_caches(
-            params, cfg, scfg.capacity, scfg.max_len, example_inputs)
-        self._prefill = jax.jit(functools.partial(
-            M.prefill, cfg=cfg, max_len=scfg.max_len))
-        # the slot batch is donated through decode and insert, so the steady
-        # state mutates ONE cache allocation instead of copying the full
-        # KV/SSM tree every step/admission
-        self._decode = jax.jit(functools.partial(
-            _decode_sample, cfg=cfg, temperature=scfg.temperature),
-            donate_argnums=(1,))
-        self._insert = jax.jit(
-            lambda caches, grp, slots: M.insert_slots(caches, grp, slots,
-                                                      self._axes),
-            donate_argnums=(0,))
+        self.paged = scfg.paged
+        if self.paged:
+            if cfg.family not in PAGED_FAMILIES:
+                raise ValueError(
+                    f"paged serving supports {PAGED_FAMILIES}, not "
+                    f"{cfg.family!r} (its decode state is dense per-slot)")
+            if scfg.admission not in ("queue", "reject"):
+                raise ValueError(f"admission must be 'queue' or 'reject', "
+                                 f"got {scfg.admission!r}")
+            if scfg.prefill_chunk is not None and scfg.prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{scfg.prefill_chunk}")
+            ps = scfg.page_size
+            self._n_slot_pages = -(-scfg.max_len // ps)
+            num_pages = (scfg.num_pages if scfg.num_pages is not None
+                         else scfg.capacity * self._n_slot_pages + 1)
+            # page 0 is the trash page: a freed/idle slot's zeroed page-table
+            # row makes its masked decode scatters land there harmlessly
+            self.pages = PagePool(num_pages, ps)
+            self.prefix = PrefixCache(self.pages) if scfg.prefix_cache else None
+            self.caches, self._axes = M.alloc_paged_caches(
+                params, cfg, scfg.capacity, scfg.max_len, ps, num_pages,
+                example_inputs)
+            # host-side page tables, (capacity, n_slot_pages) int32 — passed
+            # into every paged dispatch; a slot's row is zeroed while free
+            self._pt = np.zeros((scfg.capacity, self._n_slot_pages), np.int32)
+            self._slot_pages: dict[int, list[int]] = {}
+            self._chunk_tasks: collections.deque[_ChunkTask] = \
+                collections.deque()
+            self._prefilling: set[int] = set()
+            # paged prefill compiles once per page-rounded prompt length (or
+            # per chunk shape) — these jits are keyed by that rounded length
+            self._prefill_by_len: dict[int, Any] = {}
+            self._decode = jax.jit(functools.partial(
+                _decode_sample_paged, cfg=cfg, temperature=scfg.temperature),
+                donate_argnums=(1,))
+            self._insert_pages = jax.jit(
+                lambda caches, grp, slots, pages: M.insert_pages(
+                    caches, grp, slots, pages, self._axes),
+                donate_argnums=(0,))
+            self._set_len = jax.jit(
+                lambda caches, slot, value: M.set_slot_lens(
+                    caches, slot, value, self._axes),
+                donate_argnums=(0,))
+            self._chunk = jax.jit(functools.partial(
+                M.prefill_chunk, cfg=cfg, axes=self._axes),
+                donate_argnums=(1,))
+        else:
+            self.caches, self._axes = M.alloc_slot_caches(
+                params, cfg, scfg.capacity, scfg.max_len, example_inputs)
+            self._prefill = jax.jit(functools.partial(
+                M.prefill, cfg=cfg, max_len=scfg.max_len))
+            # the slot batch is donated through decode and insert, so the
+            # steady state mutates ONE cache allocation instead of copying
+            # the full KV/SSM tree every step/admission
+            self._decode = jax.jit(functools.partial(
+                _decode_sample, cfg=cfg, temperature=scfg.temperature),
+                donate_argnums=(1,))
+            self._insert = jax.jit(
+                lambda caches, grp, slots: M.insert_slots(caches, grp, slots,
+                                                          self._axes),
+                donate_argnums=(0,))
         self.tokens = np.zeros(scfg.capacity, np.int32)   # next decode inputs
         self._key = jax.random.PRNGKey(scfg.seed)
         self._uid = 0
-        self._prefill_shapes_seen: set[tuple[int, int]] = set()
+        self._prefill_shapes_seen: set[tuple] = set()
         self._c = {k: self.obs.counter(f"serve.{k}") for k in _STAT_KEYS}
         self._g_occupancy = self.obs.gauge("serve.occupancy")
         self._g_queue_depth = self.obs.gauge("serve.queue_depth")
+        if self.paged:
+            self._g_page_occ = self.obs.gauge("serve.page_occupancy")
         self._h_ttft = self.obs.histogram("serve.ttft_s")
         self._h_itl = self.obs.histogram("serve.inter_token_s")
         self._h_prefill = self.obs.histogram("serve.prefill_call_s")
@@ -248,10 +350,40 @@ class ContinuousEngine:
             raise ValueError(
                 f"{self.cfg.family} prompts need >= {self._min_prompt} "
                 f"tokens (conv receptive field), got {len(prompt)}")
-        if len(prompt) + max_new_tokens > self.scfg.max_len:
-            raise ValueError(
-                f"prompt ({len(prompt)}) + max_new_tokens ({max_new_tokens}) "
-                f"exceeds max_len ({self.scfg.max_len})")
+        total = len(prompt) + max_new_tokens
+        if not self.paged:
+            if total > self.scfg.max_len:
+                raise ValueError(
+                    f"prompt ({len(prompt)}) + max_new_tokens "
+                    f"({max_new_tokens}) exceeds max_len "
+                    f"({self.scfg.max_len})")
+        else:
+            # paged admission is a CAPACITY check, not a length check: the
+            # hard bound is the per-slot page table (page-rounded, so a few
+            # tokens past max_len that still fit the last page are fine);
+            # whether the request can start is a question about free pages,
+            # answered per the admission policy
+            ps = self.pages.page_size
+            bound = self._n_slot_pages * ps
+            if total > bound:
+                raise ValueError(
+                    f"prompt ({len(prompt)}) + max_new_tokens "
+                    f"({max_new_tokens}) exceeds the per-slot page table "
+                    f"({self._n_slot_pages} pages x {ps} = {bound} tokens)")
+            worst = -(-total // ps)
+            if worst > self.pages.usable_pages:
+                raise ValueError(
+                    f"request needs {worst} pages but the pool has only "
+                    f"{self.pages.usable_pages} usable — it could never be "
+                    f"admitted; raise num_pages")
+            if self.scfg.admission == "reject" and not self._admissible(worst):
+                raise PagesExhausted(
+                    f"request needs {worst} pages now but "
+                    f"free={self.pages.free_pages} + evictable="
+                    f"{self.prefix.evictable_pages if self.prefix else 0}, "
+                    f"free_slots={self.pool.free_slots}, "
+                    f"queued={self.pool.queue_depth} — resubmit later or "
+                    f"serve with admission='queue'")
         got = {k: tuple(np.asarray(v).shape) for k, v in (extra or {}).items()}
         for k, shape in self._example_extra_shapes.items():
             # seq-varying extras (VLM embeds) follow the prompt; fixed-shape
@@ -284,36 +416,42 @@ class ContinuousEngine:
         lockstep decode over the occupied batch.  Returns requests that
         finished during this step."""
         finished: list[Request] = []
-        groups: dict[Any, list[tuple[int, Request]]] = {}
-        for slot, req in self.pool.admit():
-            # coalesce same-shape admissions into one batched prefill — the
-            # per-row math is identical to batch-1, at one dispatch per group
-            shape_key = (len(req.prompt),
-                         tuple(sorted((k, np.asarray(v).shape)
-                                      for k, v in (req.extra or {}).items())))
-            groups.setdefault(shape_key, []).append((slot, req))
-        for group in groups.values():
-            self._admit_group(group, finished)
-        if self.pool.occupancy:
-            occ = self.pool.occupancy
-            t0 = time.perf_counter()
-            with obs_trace.span("serve.decode", occupancy=occ):
-                self._key, sub = jax.random.split(self._key)
-                tok, self.caches = self._decode(
-                    self.params, self.caches, jnp.asarray(self.tokens),
-                    key=sub)
-                tok = np.asarray(tok)
-            dt = time.perf_counter() - t0
-            self._c["decode_s"].inc(dt)
-            self._c["decode_steps"].inc()
-            self._h_decode.record(dt)
-            if self.recorder is not None:
-                self.recorder.record("decode", batch=self.capacity,
-                                     dtype=self.cfg.dtype, occupancy=occ,
-                                     queue_depth=self.pool.queue_depth)
-            for slot, req in list(self.pool.held()):
-                self.tokens[slot] = int(tok[slot])
-                self._emit(slot, req, int(tok[slot]), finished)
+        if self.paged:
+            self._admit_paged(finished)
+            if self._chunk_tasks:
+                self._chunk_step(finished)
+            self._decode_paged(finished)
+            self._g_page_occ.set(_ratio(self.pages.used_pages,
+                                        self.pages.usable_pages))
+        else:
+            groups: dict[Any, list[tuple[int, Request]]] = {}
+            for slot, req in self.pool.admit():
+                # coalesce same-shape admissions into one batched prefill —
+                # the per-row math is identical to batch-1, at one dispatch
+                # per group
+                groups.setdefault(_shape_key(req), []).append((slot, req))
+            for group in groups.values():
+                self._admit_group(group, finished)
+            if self.pool.occupancy:
+                occ = self.pool.occupancy
+                t0 = time.perf_counter()
+                with obs_trace.span("serve.decode", occupancy=occ):
+                    self._key, sub = jax.random.split(self._key)
+                    tok, self.caches = self._decode(
+                        self.params, self.caches, jnp.asarray(self.tokens),
+                        key=sub)
+                    tok = np.asarray(tok)
+                dt = time.perf_counter() - t0
+                self._c["decode_s"].inc(dt)
+                self._c["decode_steps"].inc()
+                self._h_decode.record(dt)
+                if self.recorder is not None:
+                    self.recorder.record("decode", batch=self.capacity,
+                                         dtype=self.cfg.dtype, occupancy=occ,
+                                         queue_depth=self.pool.queue_depth)
+                for slot, req in list(self.pool.held()):
+                    self.tokens[slot] = int(tok[slot])
+                    self._emit(slot, req, int(tok[slot]), finished)
         self._c["steps"].inc()
         self._c["occupancy_sum"].inc(self.pool.occupancy)
         self._c["queue_depth_sum"].inc(self.pool.queue_depth)
@@ -350,10 +488,26 @@ class ContinuousEngine:
             self._c["prefill_compiles"].inc()
         with obs_trace.span("serve.prefill", batch=len(group),
                             prompt_len=int(prompts.shape[1])):
-            logits, grp = self._prefill(self.params, inputs)
-            self._key, sub = jax.random.split(self._key)
-            toks = np.asarray(_pick(logits, self.scfg.temperature, sub))
-            self.caches = self._insert(self.caches, grp, jnp.asarray(slots))
+            if self.paged:
+                # prefill at the prompt length rounded up to a page multiple
+                # — the group cache then splits exactly into pages, and the
+                # per-rounded-length jit keeps compile count page-granular
+                ps = self.pages.page_size
+                n_pg = -(-int(prompts.shape[1]) // ps)
+                logits, grp = self._prefill_fn(n_pg * ps)(self.params, inputs)
+                page_rows = np.asarray(
+                    [self._slot_pages[s][:n_pg] for s in slots], np.int32)
+                self._key, sub = jax.random.split(self._key)
+                toks = np.asarray(_pick(logits, self.scfg.temperature, sub))
+                self.caches = self._insert_pages(
+                    self.caches, grp, jnp.asarray(slots),
+                    jnp.asarray(page_rows))
+            else:
+                logits, grp = self._prefill(self.params, inputs)
+                self._key, sub = jax.random.split(self._key)
+                toks = np.asarray(_pick(logits, self.scfg.temperature, sub))
+                self.caches = self._insert(self.caches, grp,
+                                           jnp.asarray(slots))
             jax.block_until_ready(logits)
         dt = time.perf_counter() - t0
         self._c["prefill_s"].inc(dt)
@@ -369,8 +523,205 @@ class ContinuousEngine:
         for (slot, req), tok in zip(group, toks):
             req.admitted_at = now
             self._h_ttft.record(now - req.submitted_at)
+            if self.paged:
+                # register BEFORE _emit: a 1-token request releases its slot
+                # (and pages) inside _emit, and the prefix cache must take
+                # its references first
+                self._register_prefix(req, slot)
             self.tokens[slot] = int(tok)
             self._emit(slot, req, int(tok), finished)
+
+    # ------------------------------------------------------ paged internals
+    def _admissible(self, worst: int) -> bool:
+        """Could a ``worst``-page request start right NOW (the 'reject'
+        admission policy's test)?  Conservative: prefix-cache hits it might
+        get are not counted, reclaimable cache pages are."""
+        evictable = self.prefix.evictable_pages if self.prefix else 0
+        return (self.pool.free_slots > 0 and self.pool.queue_depth == 0
+                and worst <= self.pages.free_pages + evictable)
+
+    def _admit_paged(self, finished: list[Request]) -> None:
+        """FIFO admission gated on pages: admit head-of-line requests while
+        a slot AND their worst-case pages are available; the first request
+        that does not fit blocks the line (no lookahead — smaller requests
+        behind it cannot starve it)."""
+        groups: dict[Any, list[tuple[int, Request]]] = {}
+        while self.pool.free_slots:
+            req = self.pool.peek()
+            if req is None:
+                break
+            plan = self._plan_pages(req)
+            if plan is None:
+                break
+            slot, _ = self.pool.admit_one()
+            self._install(slot, req, plan, groups)
+        for group in groups.values():
+            self._admit_group(group, finished)
+
+    def _plan_pages(self, req: Request) -> tuple[list[int], list[int]] | None:
+        """Reserve every page ``req`` could ever need — shared prefix pages
+        first (one pool ref each via lookup), the rest allocated fresh, so
+        decode NEVER allocates and can never deadlock mid-generation.
+        Returns ``(shared, fresh)`` or None (caller waits); on failure any
+        retained shared pages are released."""
+        ps = self.pages.page_size
+        worst = -(-(len(req.prompt) + req.max_new_tokens) // ps)
+        shared: list[int] = []
+        if self.prefix is not None and not (req.extra and "embeds" in req.extra):
+            # embedding prompts carry content outside the token ids, which
+            # is all the prefix hash sees — never share those
+            shared = self.prefix.lookup(req.prompt)
+        need = worst - len(shared)
+        fresh = self.pages.alloc(need)
+        if fresh is None and self.prefix is not None:
+            # squeeze idle prefix entries before making the line wait
+            self.prefix.evict(need - self.pages.free_pages)
+            fresh = self.pages.alloc(need)
+        if fresh is None:
+            if shared:
+                self.pages.release(shared)
+            return None
+        return shared, fresh
+
+    def _install(self, slot: int, req: Request,
+                 plan: tuple[list[int], list[int]],
+                 groups: dict[Any, list[tuple[int, Request]]]) -> None:
+        """Wire an admitted request's page table and route it to a prefill
+        path: chunked (prefix hit — only the tail needs compute — or prompt
+        longer than ``prefill_chunk``) or the same-shape batched group."""
+        shared, fresh = plan
+        ps = self.pages.page_size
+        pages = shared + fresh
+        self._slot_pages[slot] = pages
+        self._pt[slot] = 0
+        self._pt[slot, :len(pages)] = pages
+        m_tok = len(shared) * ps
+        cs = self.scfg.prefill_chunk
+        if m_tok or (cs is not None and len(req.prompt) - m_tok > cs):
+            if m_tok:
+                self._c["prefix_hits"].inc()
+                self._c["prefix_tokens_saved"].inc(m_tok)
+            # the slot's cache position starts at the shared-prefix length
+            # (0 when none) — eviction is lazy, so the leaf holds the
+            # previous occupant's value until set here
+            self.caches = self._set_len(self.caches, jnp.int32(slot),
+                                        jnp.int32(m_tok))
+            self._prefilling.add(slot)
+            self._chunk_tasks.append(_ChunkTask(req=req, slot=slot,
+                                                pos=m_tok))
+        else:
+            groups.setdefault(_shape_key(req), []).append((slot, req))
+
+    def _prefill_fn(self, r: int):
+        fn = self._prefill_by_len.get(r)
+        if fn is None:
+            fn = jax.jit(functools.partial(M.prefill, cfg=self.cfg,
+                                           max_len=r))
+            self._prefill_by_len[r] = fn
+        return fn
+
+    def _chunk_step(self, finished: list[Request]) -> None:
+        """Advance the head chunk task by ONE chunk — chunked prefill
+        interleaves with decode at chunk granularity, so a long prompt
+        cannot stall the decode batch for its whole length.  The final
+        (short) chunk runs zero-padded at the fixed chunk shape with a
+        traced valid-length, so compiles scale with chunk SHAPES, not
+        prompt lengths."""
+        task = self._chunk_tasks[0]
+        req, slot = task.req, task.slot
+        remaining = len(req.prompt) - task.pos
+        cs = self.scfg.prefill_chunk or remaining
+        n = min(cs, remaining)
+        buf = np.zeros((1, cs), np.int32)
+        buf[0, :n] = req.prompt[task.pos:task.pos + n]
+        embeds = None
+        eshape = None
+        if req.extra and "embeds" in req.extra:
+            e = np.asarray(req.extra["embeds"])
+            ebuf = np.zeros((1, cs) + e.shape[1:], e.dtype)
+            ebuf[0, :n] = e[task.pos:task.pos + n]
+            embeds = jnp.asarray(ebuf)
+            eshape = tuple(e.shape[1:])
+        shape = ("chunk", cs, eshape)
+        if shape not in self._prefill_shapes_seen:
+            self._prefill_shapes_seen.add(shape)
+            self._c["prefill_compiles"].inc()
+        t0 = time.perf_counter()
+        with obs_trace.span("serve.prefill_chunk", slot=slot, chunk=int(cs),
+                            valid=int(n)):
+            last, self.caches = self._chunk(
+                self.params, self.caches, jnp.asarray(buf),
+                jnp.asarray(self._pt[slot:slot + 1]), jnp.int32(slot),
+                jnp.int32(n), embeds=embeds)
+            jax.block_until_ready(last)
+        dt = time.perf_counter() - t0
+        self._c["prefill_s"].inc(dt)
+        self._h_prefill.record(dt)
+        self._c["prefill_tokens"].inc(int(n))
+        self._c["chunk_steps"].inc()
+        if self.recorder is not None:
+            self.recorder.record("prefill", prompt_len=int(cs), batch=1,
+                                 dtype=self.cfg.dtype,
+                                 occupancy=self.pool.occupancy,
+                                 queue_depth=self.pool.queue_depth)
+        task.pos += n
+        if task.pos < len(req.prompt):
+            return
+        self._chunk_tasks.popleft()
+        self._prefilling.discard(slot)
+        self._key, sub = jax.random.split(self._key)
+        tok = int(np.asarray(_pick(last, self.scfg.temperature, sub))[0])
+        now = time.perf_counter()
+        req.admitted_at = now
+        self._h_ttft.record(now - req.submitted_at)
+        self._c["admitted"].inc()
+        self._register_prefix(req, slot)
+        self.tokens[slot] = tok
+        self._emit(slot, req, tok, finished)
+
+    def _register_prefix(self, req: Request, slot: int) -> None:
+        """Offer a freshly prefilled prompt's full pages to the prefix cache
+        (idempotent for already-known blocks)."""
+        if self.prefix is None or (req.extra and "embeds" in req.extra):
+            return
+        n_full = (len(req.prompt) - 1) // self.pages.page_size
+        if n_full:
+            # the FULL prompt goes to insert — its key chain already stops
+            # at the last shareable block; truncating first would shift that
+            # bound and silently drop the final block
+            self.prefix.insert(req.prompt, self._slot_pages[slot][:n_full])
+
+    def _decode_paged(self, finished: list[Request]) -> None:
+        """One lockstep decode over slots NOT mid chunked-prefill: the
+        ``active`` mask keeps inactive rows from writing real pages or
+        advancing their cache position."""
+        decoding = [s for s, _ in self.pool.held()
+                    if s not in self._prefilling]
+        if not decoding:
+            return
+        occ = len(decoding)
+        active = np.zeros(self.capacity, bool)
+        active[decoding] = True
+        t0 = time.perf_counter()
+        with obs_trace.span("serve.decode", occupancy=occ):
+            self._key, sub = jax.random.split(self._key)
+            tok, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(self.tokens),
+                jnp.asarray(self._pt), jnp.asarray(active), key=sub)
+            tok = np.asarray(tok)
+        dt = time.perf_counter() - t0
+        self._c["decode_s"].inc(dt)
+        self._c["decode_steps"].inc()
+        self._h_decode.record(dt)
+        if self.recorder is not None:
+            self.recorder.record("decode", batch=self.capacity,
+                                 dtype=self.cfg.dtype, occupancy=occ,
+                                 queue_depth=self.pool.queue_depth)
+        for slot, req in list(self.pool.held()):
+            if slot in self._prefilling:
+                continue
+            self.tokens[slot] = int(tok[slot])
+            self._emit(slot, req, int(tok[slot]), finished)
 
     def _emit(self, slot: int, req: Request, tok: int,
               finished: list[Request]) -> None:
@@ -393,6 +744,14 @@ class ContinuousEngine:
             # cache-sized dispatch (models.evict_slot exists for callers that
             # want eager invalidation)
             self.pool.release(slot)
+            if self.paged:
+                # drop the slot's page references (prefix-shared pages stay
+                # alive through the cache's own ref) and zero its page-table
+                # row so stale decode scatters land in the trash page
+                pages = self._slot_pages.pop(slot, None)
+                if pages:
+                    self.pages.release(pages)
+                self._pt[slot] = 0
             self._c["completed"].inc()
             finished.append(req)
 
@@ -424,7 +783,7 @@ class ContinuousEngine:
         raising or emitting inf/NaN."""
         s = self.stats
         busy = s["prefill_s"] + s["decode_s"]
-        return {
+        out = {
             "queue_depth": float(self.pool.queue_depth),
             "slot_occupancy": float(self.pool.occupancy),
             "mean_occupancy": _ratio(s["occupancy_sum"], s["steps"]),
@@ -436,11 +795,30 @@ class ContinuousEngine:
             "decode_tokens_per_s": _ratio(s["tokens_out"] - s["admitted"],
                                           s["decode_s"]),
         }
+        if self.paged:
+            out.update({
+                "page_occupancy": _ratio(self.pages.used_pages,
+                                         self.pages.usable_pages),
+                "free_pages": float(self.pages.free_pages),
+                "prefix_hits": float(s["prefix_hits"]),
+                "prefix_tokens_saved": float(s["prefix_tokens_saved"]),
+                "prefix_entries": float(len(self.prefix)
+                                        if self.prefix else 0),
+                "chunk_steps": float(s["chunk_steps"]),
+            })
+        return out
 
 
 def _decode_sample(params, caches, token, *, cfg: ModelConfig,
                    temperature: float, key):
     logits, caches = M.decode_step(params, caches, token, cfg)
+    return _pick(logits, temperature, key), caches
+
+
+def _decode_sample_paged(params, caches, token, pt, active, *,
+                         cfg: ModelConfig, temperature: float, key):
+    logits, caches = M.decode_step(params, caches, token, cfg, pt=pt,
+                                   active=active)
     return _pick(logits, temperature, key), caches
 
 

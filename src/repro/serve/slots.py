@@ -44,6 +44,24 @@ class SlotPool:
             admitted.append((slot, item))
         return admitted
 
+    def peek(self) -> Any | None:
+        """The item at the head of the queue (the next FIFO admission), or
+        None — lets resource-gated admission (the paged engine's page check)
+        inspect head-of-line cost before committing a slot."""
+        return self._queue[0] if self._queue else None
+
+    def admit_one(self) -> tuple[int, Any] | None:
+        """Admit exactly the head-of-line item into the lowest free slot, or
+        None when the queue is empty / no slot is free.  With :meth:`peek`
+        this is the FIFO-preserving building block for admission loops that
+        must stop when some *other* resource (cache pages) runs out."""
+        if not self._queue or not self._free:
+            return None
+        slot = self._free.pop()
+        item = self._queue.popleft()
+        self._held[slot] = item
+        return slot, item
+
     def release(self, slot: int) -> Any:
         if slot not in self._held:
             raise KeyError(f"slot {slot} is not held")
@@ -62,6 +80,10 @@ class SlotPool:
     @property
     def occupancy(self) -> int:
         return len(self._held)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
 
     @property
     def queue_depth(self) -> int:

@@ -1,0 +1,266 @@
+"""Paged-KV serving: differential correctness vs the static reference
+engine (greedy token identity across arrival orderings, with prefix sharing
+and chunked prefill on), page accounting (no leaks, reservation-at-admission),
+the relaxed page-capacity admission bound, and the compile-count guarantee of
+fixed chunk shapes."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
+from repro.serve.pages import PagesExhausted
+
+CFG = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab=128,
+                  dtype="float32").validate()
+MAX_LEN = 48
+
+
+@pytest.fixture(scope="module")
+def params():
+    return nn.unwrap(M.init_lm(jax.random.PRNGKey(0), CFG))
+
+
+def _requests(rng, n, lo=3, hi=28, new=(2, 8)):
+    reqs = [(rng.integers(1, CFG.vocab, int(rng.integers(lo, hi)))
+             .astype(np.int32), int(rng.integers(*new))) for _ in range(n)]
+    # force one shared >1-page prefix pair into every mix
+    p, b = reqs[0]
+    reqs.append((np.concatenate([p[:len(p) - 1], [7, 9, 11]])
+                 .astype(np.int32), b))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def reference(params):
+    rng = np.random.default_rng(0)
+    reqs = _requests(rng, 5)
+    ref = Engine(params, CFG, ServeConfig(max_len=MAX_LEN))
+    outs = [ref.generate(p[None], b)[0] for p, b in reqs]
+    return reqs, outs
+
+
+def _paged_cfg(**kw):
+    base = dict(max_len=MAX_LEN, capacity=3, paged=True, page_size=8,
+                prefill_chunk=8)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+class TestDifferential:
+    """Greedy paged output == static Engine output, token for token."""
+
+    @pytest.mark.parametrize("order", ["fifo", "reversed", "staggered"])
+    def test_arrival_orderings(self, params, reference, order):
+        reqs, outs = reference
+        eng = ContinuousEngine(params, CFG, _paged_cfg())
+        idxs = list(range(len(reqs)))
+        if order == "reversed":
+            idxs = idxs[::-1]
+        uid_to_idx = {}
+        if order == "staggered":
+            # half up front, the rest arriving mid-flight
+            for i in idxs[:2]:
+                uid_to_idx[eng.submit(*reqs[i]).uid] = i
+            got = {}
+            for _ in range(3):
+                for r in eng.step():
+                    got[r.uid] = r.output
+            for i in idxs[2:]:
+                uid_to_idx[eng.submit(*reqs[i]).uid] = i
+            got.update(eng.run(max_steps=500))
+        else:
+            for i in idxs:
+                uid_to_idx[eng.submit(*reqs[i]).uid] = i
+            got = eng.run(max_steps=500)
+        for uid, i in uid_to_idx.items():
+            assert np.array_equal(got[uid], outs[i]), \
+                f"req {i} diverged under {order} arrival"
+        # all pages back except the prefix cache's own references
+        assert eng.pages.used_pages == (len(eng.prefix)
+                                        if eng.prefix else 0)
+
+    def test_no_prefix_no_chunk_matches_too(self, params, reference):
+        reqs, outs = reference
+        eng = ContinuousEngine(params, CFG, _paged_cfg(
+            prefix_cache=False, prefill_chunk=None))
+        uids = [eng.submit(p, b).uid for p, b in reqs]
+        got = eng.run(max_steps=500)
+        for uid, out in zip(uids, outs):
+            assert np.array_equal(got[uid], out)
+        assert eng.pages.used_pages == 0          # nothing may leak
+
+    def test_tight_pool_queues_and_completes(self, params, reference):
+        """Fewer pages than the workload's worst case: admission must make
+        the head of line wait (never deadlock, never corrupt) and still
+        reproduce the reference stream."""
+        reqs, outs = reference
+        eng = ContinuousEngine(params, CFG, _paged_cfg(
+            capacity=2, num_pages=11))
+        uids = [eng.submit(p, b).uid for p, b in reqs]
+        got = eng.run(max_steps=1000)
+        for uid, out in zip(uids, outs):
+            assert np.array_equal(got[uid], out)
+
+
+class TestPrefixSharing:
+    def test_sequential_identical_prefixes_hit(self, params):
+        rng = np.random.default_rng(3)
+        base = rng.integers(1, CFG.vocab, 21).astype(np.int32)
+        tail = np.concatenate([base[:20],
+                               rng.integers(1, CFG.vocab, 6)]).astype(np.int32)
+        ref = Engine(params, CFG, ServeConfig(max_len=MAX_LEN))
+        want = [ref.generate(p[None], 5)[0] for p in (base, tail)]
+
+        eng = ContinuousEngine(params, CFG, _paged_cfg(capacity=2))
+        r1 = eng.submit(base, 5)
+        out = eng.run(max_steps=200)
+        assert np.array_equal(out[r1.uid], want[0])
+        r2 = eng.submit(tail, 5)
+        out = eng.run(max_steps=200)
+        assert np.array_equal(out[r2.uid], want[1])
+        # 20 shared tokens / 8-token pages -> 2 full pages skipped
+        assert eng.stats["prefix_hits"] == 1
+        assert eng.stats["prefix_tokens_saved"] == 16
+        assert eng.metrics()["prefix_hits"] == 1.0
+
+    def test_shared_pages_survive_owner_eviction(self, params):
+        """The cache's reference keeps a registered page alive after the
+        registering request finishes — a later identical prompt still hits."""
+        rng = np.random.default_rng(4)
+        p = rng.integers(1, CFG.vocab, 17).astype(np.int32)
+        eng = ContinuousEngine(params, CFG, _paged_cfg(capacity=1))
+        eng.submit(p, 3)
+        eng.run(max_steps=200)
+        assert len(eng.prefix) == 2               # (17-1)//8 blocks
+        held = eng.pages.used_pages
+        assert held == 2                          # only cache refs remain
+        eng.submit(p, 3)
+        eng.run(max_steps=200)
+        assert eng.stats["prefix_hits"] == 1
+
+
+class TestChunkedPrefill:
+    def test_compiles_bounded_by_chunk_shapes(self, params):
+        """Prompt LENGTHS must not drive prefill compiles: every chunked
+        prompt reuses the one (1, chunk) trace, padded tail included."""
+        rng = np.random.default_rng(5)
+        eng = ContinuousEngine(params, CFG, _paged_cfg(
+            prefix_cache=False, capacity=2))
+        lens = [12, 17, 23, 27, 40]               # all > chunk, all distinct
+        refs = []
+        for n in lens:
+            p = rng.integers(1, CFG.vocab, n).astype(np.int32)
+            refs.append((eng.submit(p, 3), p))
+        eng.run(max_steps=500)
+        assert eng.stats["chunk_steps"] == sum(-(-n // 8) for n in lens)
+        assert eng.stats["prefill_compiles"] == 1
+        # and decode emitted everything it owed
+        assert eng.stats["completed"] == len(lens)
+
+    def test_long_prompt_interleaves_with_decode(self, params):
+        """A long chunked prompt must not stall an in-flight decode: the
+        short request keeps emitting tokens while the long one prefills."""
+        rng = np.random.default_rng(6)
+        short = rng.integers(1, CFG.vocab, 4).astype(np.int32)
+        long = rng.integers(1, CFG.vocab, 40).astype(np.int32)
+        eng = ContinuousEngine(params, CFG, _paged_cfg(
+            capacity=2, prefix_cache=False, prefill_chunk=8))
+        rs = eng.submit(short, 8)
+        rl = eng.submit(long, 3)
+        steps = 0
+        while not rl.tokens:                       # long still chunking
+            eng.step()
+            steps += 1
+            assert steps < 50
+        # 40 tokens / 8-token chunks = 5 prefill steps, and the short
+        # request emitted a token through every one of them
+        assert len(rs.tokens) >= 4
+        eng.run(max_steps=200)
+        ref = Engine(params, CFG, ServeConfig(max_len=MAX_LEN))
+        assert np.array_equal(rl.output, ref.generate(long[None], 3)[0])
+        assert np.array_equal(rs.output, ref.generate(short[None], 8)[0])
+
+
+class TestAdmissionBounds:
+    def test_dense_engine_still_rejects_past_max_len(self, params):
+        eng = ContinuousEngine(params, CFG, ServeConfig(max_len=MAX_LEN))
+        eng.submit(np.arange(1, 41, dtype=np.int32), 8)     # == max_len: ok
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(np.arange(1, 41, dtype=np.int32), 9)  # one past: no
+
+    def test_paged_accepts_up_to_page_rounded_bound(self, params):
+        """The old hard ``> max_len`` rejection is gone in paged mode: the
+        bound is the page table (max_len rounded UP to pages), and a request
+        in the formerly rejected gap completes correctly."""
+        scfg = ServeConfig(max_len=40, capacity=2, paged=True, page_size=16,
+                           prefill_chunk=8, prefix_cache=False)
+        eng = ContinuousEngine(params, CFG, scfg)
+        prompt = np.arange(1, 41, dtype=np.int32)            # 40 + 4 > max_len
+        r = eng.submit(prompt, 4)                            # but <= 3*16
+        out = eng.run(max_steps=300)
+        ref = Engine(params, CFG, ServeConfig(max_len=48))
+        assert np.array_equal(out[r.uid], ref.generate(prompt[None], 4)[0])
+        with pytest.raises(ValueError, match="page table"):
+            eng.submit(prompt, 9)                            # 49 > 48: never
+
+    def test_never_fits_raises_even_with_queue_policy(self, params):
+        eng = ContinuousEngine(params, CFG, ServeConfig(
+            max_len=MAX_LEN, capacity=2, paged=True, page_size=8,
+            num_pages=4))                                    # 3 usable pages
+        with pytest.raises(ValueError, match="never"):
+            eng.submit(np.arange(1, 30, dtype=np.int32), 4)  # needs 5 pages
+
+    def test_reject_policy_raises_when_it_cannot_start_now(self, params):
+        eng = ContinuousEngine(params, CFG, ServeConfig(
+            max_len=MAX_LEN, capacity=1, paged=True, page_size=8,
+            admission="reject", prefix_cache=False))
+        p = np.arange(1, 10, dtype=np.int32)
+        r1 = eng.submit(p, 3)                    # queue empty: accepted
+        with pytest.raises(PagesExhausted):
+            eng.submit(p, 3)                     # r1 is ahead of it
+        eng.run(max_steps=200)
+        assert r1.done
+        r2 = eng.submit(p, 3)                    # capacity is back: accepted
+        eng.run(max_steps=200)
+        assert r2.done
+
+    def test_queue_policy_waits_instead(self, params):
+        eng = ContinuousEngine(params, CFG, ServeConfig(
+            max_len=MAX_LEN, capacity=1, paged=True, page_size=8,
+            prefix_cache=False))
+        p = np.arange(1, 10, dtype=np.int32)
+        rs = [eng.submit(p, 3) for _ in range(3)]
+        eng.run(max_steps=500)
+        assert all(r.done for r in rs)
+
+
+class TestGating:
+    def test_paged_rejects_non_attention_families(self):
+        ssm = ModelConfig(name="s", family="ssm", n_layers=2, d_model=64,
+                          n_heads=0, n_kv_heads=0, d_ff=0, vocab=64,
+                          ssm_state=16, ssm_headdim=32, ssm_chunk=8,
+                          dtype="float32").validate()
+        params = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), ssm))
+        with pytest.raises(ValueError, match="paged"):
+            ContinuousEngine(params, ssm, _paged_cfg())
+
+    def test_bad_admission_policy_rejected(self, params):
+        with pytest.raises(ValueError, match="admission"):
+            ContinuousEngine(params, CFG, _paged_cfg(admission="drop"))
+
+    def test_paged_decode_step_guard(self, params):
+        ssm = ModelConfig(name="s", family="ssm", n_layers=2, d_model=64,
+                          n_heads=0, n_kv_heads=0, d_ff=0, vocab=64,
+                          ssm_state=16, ssm_headdim=32, ssm_chunk=8,
+                          dtype="float32").validate()
+        sp = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), ssm))
+        eng = ContinuousEngine(sp, ssm, ServeConfig(max_len=16))
+        with pytest.raises(ValueError, match="attention"):
+            M.decode_step(sp, eng.caches, np.zeros(8, np.int32), ssm,
+                          pt=np.zeros((8, 2), np.int32))

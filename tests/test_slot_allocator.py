@@ -101,3 +101,173 @@ class TestApi:
         pool.release(1)
         pool.submit(3)
         assert pool.admit() == [(1, 3)]
+
+
+# ===================================================== paged KV cache pool
+from repro.serve.pages import PagePool, PrefixCache  # noqa: E402
+
+
+class TestPagePool:
+    @given(st.integers(2, 24), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_no_two_writers_alias_a_page(self, num_pages, seed):
+        """Across a random alloc/retain/release/cow schedule, a writable
+        (refcount-1) page is owned by exactly one allocation, every page id
+        is issued to at most one live *writer*, and the reserved trash page
+        is never handed out."""
+        rng = np.random.default_rng(seed)
+        pool = PagePool(num_pages, page_size=4)
+        refs: dict[int, int] = {}          # shadow model: page -> refcount
+        for _ in range(60):
+            op = rng.integers(4)
+            if op == 0:
+                n = int(rng.integers(1, 4))
+                got = pool.alloc(n)
+                if got is None:
+                    assert pool.free_pages < n
+                else:
+                    assert len(got) == n == len(set(got))
+                    for p in got:
+                        assert p != 0, "trash page allocated"
+                        assert p not in refs, "free-list re-issued a live page"
+                        refs[p] = 1
+            elif op == 1 and refs:
+                p = int(rng.choice(sorted(refs)))
+                pool.retain(p)
+                refs[p] += 1
+            elif op == 2 and refs:
+                p = int(rng.choice(sorted(refs)))
+                pool.release(p)
+                refs[p] -= 1
+                if refs[p] == 0:
+                    del refs[p]
+            elif op == 3 and refs:
+                p = int(rng.choice(sorted(refs)))
+                fresh = pool.cow(p)
+                if fresh is not None:
+                    # alloc precedes the ref move, so the fresh page is
+                    # always a different live-free page, never the trash
+                    assert fresh not in refs and fresh != 0 and fresh != p
+                    refs[p] -= 1
+                    if refs[p] == 0:
+                        del refs[p]
+                    refs[fresh] = 1
+            for p, r in refs.items():
+                assert pool.refcount(p) == r
+                assert pool.writable(p) == (r == 1)
+            assert pool.used_pages == len(refs)
+            assert pool.free_pages == pool.usable_pages - len(refs)
+
+    @given(st.integers(2, 16), st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_refcount_zero_exactly_at_eviction(self, num_pages, seed):
+        """A page returns to the free list exactly when its last reference
+        is released — never before (shared release frees nothing) and never
+        without it (no leaks once all refs are gone)."""
+        rng = np.random.default_rng(seed)
+        pool = PagePool(num_pages, page_size=4)
+        live: dict[int, int] = {}
+        for _ in range(50):
+            if rng.integers(2) == 0:
+                got = pool.alloc(1)
+                if got is not None:
+                    live[got[0]] = 1
+                    extra = int(rng.integers(0, 3))
+                    for _ in range(extra):
+                        pool.retain(got[0])
+                    live[got[0]] += extra
+            elif live:
+                p = int(rng.choice(sorted(live)))
+                before = pool.free_pages
+                freed = pool.release(p)
+                live[p] -= 1
+                if live[p] == 0:
+                    assert freed == 1 and pool.free_pages == before + 1
+                    del live[p]
+                else:
+                    assert freed == 0 and pool.free_pages == before
+        # drain: every page must come back exactly once
+        for p, r in list(live.items()):
+            for i in range(r):
+                assert pool.release(p) == (1 if i == r - 1 else 0)
+        assert pool.free_pages == pool.usable_pages
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_free_list_never_double_frees(self, seed):
+        """Releasing a page past refcount zero raises instead of corrupting
+        the free list, and the free list never holds duplicates."""
+        rng = np.random.default_rng(seed)
+        pool = PagePool(8, page_size=4)
+        pages = pool.alloc(int(rng.integers(1, 7)))
+        pool.release(pages)
+        for p in pages:
+            with pytest.raises(ValueError):
+                pool.release(p)
+        assert len(pool._free) == len(set(pool._free))
+        assert pool.free_pages == pool.usable_pages
+
+    def test_alloc_is_all_or_nothing(self):
+        pool = PagePool(4, page_size=4)      # 3 usable
+        assert pool.alloc(4) is None
+        assert pool.free_pages == 3          # nothing leaked by the failure
+        got = pool.alloc(3)
+        assert sorted(got) == [1, 2, 3]
+        assert pool.alloc(1) is None
+
+    def test_reserved_trash_page_is_untouchable(self):
+        pool = PagePool(4, page_size=4)
+        for fn in (pool.retain, pool.release):
+            with pytest.raises(ValueError):
+                fn(0)
+        with pytest.raises(ValueError):
+            pool.retain(4)                   # out of range too
+
+
+class TestPrefixCache:
+    def _pool(self):
+        return PagePool(32, page_size=4)
+
+    def test_lookup_roundtrip_retains_for_caller(self):
+        pool = self._pool()
+        cache = PrefixCache(pool)
+        toks = np.arange(13, dtype=np.int32)          # 3 shareable blocks
+        pages = pool.alloc(4)
+        cache.insert(toks, pages[:3])
+        hit = cache.lookup(toks)
+        assert hit == pages[:3]
+        assert all(pool.refcount(p) == 3 for p in hit)  # us + cache + lookup
+        # a diverging prompt matches only the common chain
+        other = np.concatenate([toks[:8], [99, 99, 99, 99, 0]]).astype(np.int32)
+        assert cache.lookup(other) == pages[:2]
+
+    def test_tail_token_never_shared(self):
+        """Exactly page-aligned prompts share all but their final page: the
+        admitting request must always compute its first-token logits."""
+        pool = self._pool()
+        cache = PrefixCache(pool)
+        toks = np.arange(8, dtype=np.int32)           # 2 pages, 1 shareable
+        assert len(cache._keys(toks)) == 1
+        assert len(cache._keys(toks[:5])) == 1
+        assert len(cache._keys(toks[:4])) == 0
+
+    def test_evict_frees_exclusive_entries_first(self):
+        pool = self._pool()
+        cache = PrefixCache(pool)
+        a = pool.alloc(1)[0]
+        b = pool.alloc(1)[0]
+        cache.insert(np.arange(5, dtype=np.int32), [a])
+        cache.insert(np.arange(50, 55, dtype=np.int32), [b])
+        pool.release(a)
+        pool.release(b)
+        pool.retain(b)                    # b now shared with a "slot"
+        assert cache.evictable_pages == 1
+        freed = cache.evict(1)
+        assert freed == 1
+        assert pool.refcount(b) == 2      # shared entry survived
+        assert len(cache) == 1
+
+    def test_insert_requires_enough_pages(self):
+        cache = PrefixCache(self._pool())
+        with pytest.raises(ValueError, match="blocks"):
+            cache.insert(np.arange(13, dtype=np.int32), [1])
