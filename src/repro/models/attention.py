@@ -259,10 +259,14 @@ def _paged_decode(cache: dict[str, Any], q, k, v, cfg: ModelConfig, *,
     n_pages = pt.shape[1]
 
     pos = idx[:, None] + jnp.arange(s)[None, :]            # (B, S) absolute
-    # clamp for overflowing rows (finished slots whose stale len keeps
-    # advancing); their page-table rows are all-trash so the write is inert
-    page_slot = jnp.minimum(pos // ps, n_pages - 1)
-    page_ids = jnp.take_along_axis(pt, page_slot, axis=1)  # (B, S)
+    # positions past the table's end go to the trash page: chunked-prefill
+    # padding can overrun a full table (pos // ps == n_pages) and clamping
+    # would scatter duplicate offsets onto the LAST real page, overwriting
+    # live KV — the clamp below only keeps the gather index legal
+    page_slot = pos // ps
+    page_ids = jnp.take_along_axis(
+        pt, jnp.minimum(page_slot, n_pages - 1), axis=1)   # (B, S)
+    page_ids = jnp.where(page_slot < n_pages, page_ids, 0)
     if active is not None:
         page_ids = jnp.where(active[:, None], page_ids, 0)  # trash page
     offs = pos % ps

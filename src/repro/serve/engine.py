@@ -482,7 +482,15 @@ class ContinuousEngine:
         for k in (group[0][1].extra or {}):
             inputs[k] = jnp.asarray(
                 np.stack([np.asarray(r.extra[k]) for _, r in group]))
-        shape = (len(group), prompts.shape[1])
+        if self.paged:
+            # the paged jit is keyed on the page-rounded length, so the
+            # compile counter must be too — exact prompt lengths would
+            # overcount
+            ps = self.pages.page_size
+            n_pg = -(-int(prompts.shape[1]) // ps)
+            shape = (len(group), n_pg * ps)
+        else:
+            shape = (len(group), prompts.shape[1])
         if shape not in self._prefill_shapes_seen:
             self._prefill_shapes_seen.add(shape)
             self._c["prefill_compiles"].inc()
@@ -492,8 +500,6 @@ class ContinuousEngine:
                 # prefill at the prompt length rounded up to a page multiple
                 # — the group cache then splits exactly into pages, and the
                 # per-rounded-length jit keeps compile count page-granular
-                ps = self.pages.page_size
-                n_pg = -(-int(prompts.shape[1]) // ps)
                 logits, grp = self._prefill_fn(n_pg * ps)(self.params, inputs)
                 page_rows = np.asarray(
                     [self._slot_pages[s][:n_pg] for s in slots], np.int32)

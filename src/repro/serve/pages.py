@@ -95,14 +95,19 @@ class PagePool:
         free list.  Releasing an already-free (or reserved) page raises —
         the double-free guard.  Returns how many pages were actually freed."""
         freed = 0
-        for p in self._as_pages(pages):
-            if self._ref[p] <= 0:
-                raise ValueError(f"double free of page {p}")
-            self._ref[p] -= 1
-            if self._ref[p] == 0:
-                self._free.append(p)
+        try:
+            for p in self._as_pages(pages):
+                if self._ref[p] <= 0:
+                    raise ValueError(f"double free of page {p}")
+                self._ref[p] -= 1
+                if self._ref[p] == 0:
+                    self._free.append(p)
+                    freed += 1
+        finally:
+            # one sort per call, not per page; finally keeps the descending
+            # free-list invariant even when a double-free raises mid-batch
+            if freed:
                 self._free.sort(reverse=True)
-                freed += 1
         return freed
 
     def cow(self, page: int) -> int | None:
@@ -255,17 +260,20 @@ class PrefixCache:
         return added
 
     def evict(self, want_freed: int) -> int:
-        """Release LRU entries until ``want_freed`` pages actually returned
-        to the free list (releasing a still-shared page frees nothing but
-        does forfeit future sharing) or the cache is empty.  Returns the
-        number of pages freed."""
+        """Release LRU *exclusively-held* entries until ``want_freed`` pages
+        returned to the free list or none remain.  Entries whose page is
+        still shared with a live slot are kept: evicting them frees nothing
+        (the slot's reference pins the page) and only forfeits future
+        sharing — they become evictable when their last slot releases.
+        Returns the number of pages freed."""
         freed = 0
         while freed < want_freed and self._entries:
-            # exclusively-held entries first: releasing those actually frees
             key = min(self._entries,
                       key=lambda k: (not self.pool.writable(
                           self._entries[k].page),
                           self._entries[k].last_used))
+            if not self.pool.writable(self._entries[key].page):
+                break  # best candidate still shared -> nothing reclaimable
             ent = self._entries.pop(key)
             freed += self.pool.release(ent.page)
         return freed

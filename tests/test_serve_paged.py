@@ -163,6 +163,35 @@ class TestChunkedPrefill:
         # and decode emitted everything it owed
         assert eng.stats["completed"] == len(lens)
 
+    def test_group_prefill_compiles_counted_page_granular(self, params):
+        """Un-chunked paged prefills jit at the page-rounded length, so the
+        compile counter must key on that too: distinct exact prompt lengths
+        rounding to the same page count are ONE compile, not one each."""
+        eng = ContinuousEngine(params, CFG, _paged_cfg(
+            prefix_cache=False, prefill_chunk=None, capacity=1))
+        rng = np.random.default_rng(7)
+        for n in (3, 5, 7):               # all round up to one 8-token page
+            eng.submit(rng.integers(1, CFG.vocab, n).astype(np.int32), 2)
+            eng.run(max_steps=100)
+        assert eng.stats["prefill_compiles"] == 1
+
+    def test_padded_final_chunk_overflowing_full_table(self, params):
+        """A final zero-padded chunk can overrun the slot's page table when
+        the worst-case reservation fills it entirely; those positions must
+        scatter to the trash page, not wrap onto the table's LAST real page
+        and overwrite live prompt/decode KV (regression: the overflow was
+        clamped to the last page-table column)."""
+        # worst = ceil((45+3)/8) = 6 pages == the full ceil(48/8) table, and
+        # the final chunk covers positions [40, 60) — 48..59 overflow
+        scfg = ServeConfig(max_len=48, capacity=1, paged=True, page_size=8,
+                           prefill_chunk=20, prefix_cache=False)
+        eng = ContinuousEngine(params, CFG, scfg)
+        prompt = np.arange(1, 46, dtype=np.int32)
+        r = eng.submit(prompt, 3)
+        out = eng.run(max_steps=200)
+        ref = Engine(params, CFG, ServeConfig(max_len=48))
+        assert np.array_equal(out[r.uid], ref.generate(prompt[None], 3)[0])
+
     def test_long_prompt_interleaves_with_decode(self, params):
         """A long chunked prompt must not stall an in-flight decode: the
         short request keeps emitting tokens while the long one prefills."""

@@ -267,6 +267,30 @@ class TestPrefixCache:
         assert pool.refcount(b) == 2      # shared entry survived
         assert len(cache) == 1
 
+    def test_evict_keeps_shared_entries_when_demand_exceeds(self):
+        """Asking for more pages than are reclaimable stops at the shared
+        entries instead of stripping the whole cache: releasing a page a
+        live slot still references frees nothing, so popping those entries
+        would wipe all prefix-sharing state while reclaiming zero pages."""
+        pool = self._pool()
+        cache = PrefixCache(pool)
+        pages = pool.alloc(3)
+        for i, p in enumerate(pages):
+            cache.insert(np.arange(i * 100, i * 100 + 5, dtype=np.int32), [p])
+            pool.release(p)               # cache holds the only ref ...
+        pool.retain(pages[1])             # ... except these two, shared
+        pool.retain(pages[2])             # with in-flight "slots"
+        freed = cache.evict(3)            # only 1 page is reclaimable
+        assert freed == 1
+        assert len(cache) == 2            # shared entries survive
+        assert pool.refcount(pages[1]) == 2
+        assert pool.refcount(pages[2]) == 2
+        assert cache.evict(1) == 0        # and stay until their slot ends
+        assert len(cache) == 2
+        pool.release(pages[1])            # slot finished: now reclaimable
+        assert cache.evict(1) == 1
+        assert len(cache) == 1
+
     def test_insert_requires_enough_pages(self):
         cache = PrefixCache(self._pool())
         with pytest.raises(ValueError, match="blocks"):
