@@ -1,0 +1,54 @@
+"""repro.autotune — always-on autotuning from live serving traffic.
+
+Closes the record -> tune -> verify -> deploy loop inside one running
+deployment: an :class:`AutotuneService` drains the live workload mix, tunes
+the busiest shapes in a shadow store, gates every candidate through the
+probabilistic correctness sweep plus an energy margin
+(:class:`PromotionGate`), and commits survivors to the live
+:class:`~repro.core.cache.ScheduleCache` in one atomic batch — running
+engines hot-swap schedules on their next step, no restart.
+
+Cross-session memory lives in :class:`TuneHistory` (warm starts from the
+nearest tuned neighbor, fitted guided-search greed); every decision is
+journaled via :class:`EventLog` for ``launch/obsreport.py --kind autotune``.
+
+Exports resolve lazily so jax-free consumers (``obsreport`` validating an
+event journal via :mod:`repro.autotune.log`) never pay for the service's
+jax-backed modules.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    "TuneTarget": "repro.autotune.adapters",
+    "serve_targets": "repro.autotune.adapters",
+    "GateDecision": "repro.autotune.gate",
+    "PromotionGate": "repro.autotune.gate",
+    "incumbent_energy": "repro.autotune.gate",
+    "TuneHistory": "repro.autotune.history",
+    "feature_distance": "repro.autotune.history",
+    "features_of": "repro.autotune.history",
+    "EventLog": "repro.autotune.log",
+    "load_events": "repro.autotune.log",
+    "validate_events": "repro.autotune.log",
+    "AutotuneConfig": "repro.autotune.service",
+    "AutotuneService": "repro.autotune.service",
+    "WorkloadDistribution": "repro.autotune.service",
+    "jsonl_source": "repro.autotune.service",
+    "recorder_source": "repro.autotune.service",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__() -> list[str]:
+    return __all__

@@ -21,7 +21,7 @@ import os
 import tempfile
 import threading
 import warnings
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 from repro.core.schedule import Schedule
 
@@ -91,6 +91,24 @@ class CacheEntry:
         return CacheEntry(**d)
 
 
+@dataclasses.dataclass(frozen=True)
+class PendingPut:
+    """One staged :meth:`ScheduleCache.commit` entry — a ``put`` that has not
+    happened yet.  The autotune promotion path stages every gated winner of a
+    cycle and lands them in ONE commit: one version bump, one atomic flush,
+    so engines watching :meth:`ScheduleCache.changed_since` re-resolve once
+    per promotion batch instead of once per entry."""
+
+    kernel_name: str
+    signature: str
+    schedule: Schedule
+    energy: float
+    tests_passed: bool
+    test_samples: int = 0
+    round_id: int = 0
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
 class ScheduleCache:
     def __init__(self, path: str | None = None):
         self.path = path
@@ -129,13 +147,37 @@ class ScheduleCache:
     def put(self, kernel_name: str, signature: str, schedule: Schedule,
             energy: float, tests_passed: bool, test_samples: int = 0,
             round_id: int = 0, **meta: Any) -> None:
-        entry = CacheEntry(schedule_json=schedule.to_json(), energy=energy,
-                           tests_passed=tests_passed, test_samples=test_samples,
-                           round_id=round_id, meta=meta)
+        self.commit([PendingPut(kernel_name=kernel_name, signature=signature,
+                                schedule=schedule, energy=energy,
+                                tests_passed=tests_passed,
+                                test_samples=test_samples, round_id=round_id,
+                                meta=meta)])
+
+    def commit(self, puts: Sequence[PendingPut]) -> None:
+        """Land a batch of entries atomically: every entry is appended under
+        one lock hold, the version bumps ONCE, and the store flushes once
+        (write-then-rename, so readers of ``path`` see the old file or the
+        whole batch, never a torn state).  An empty batch is a no-op — no
+        bump, no flush."""
+        if not puts:
+            return
         with self._lock:
-            self._data.setdefault(self.key(kernel_name, signature), []).append(entry.to_dict())
+            for p in puts:
+                entry = CacheEntry(schedule_json=p.schedule.to_json(),
+                                   energy=p.energy,
+                                   tests_passed=p.tests_passed,
+                                   test_samples=p.test_samples,
+                                   round_id=p.round_id, meta=dict(p.meta))
+                self._data.setdefault(self.key(p.kernel_name, p.signature),
+                                      []).append(entry.to_dict())
             self.version += 1
             self._flush()
+
+    def changed_since(self, version: int) -> bool:
+        """True when the store has committed anything after ``version`` — the
+        O(1) check engines run per step to detect a hot-swapped schedule
+        (capture ``cache.version``, later ask ``cache.changed_since(v)``)."""
+        return self.version != version
 
     def best(self, kernel_name: str, signature: str) -> Schedule | None:
         """Greedy rank: among all rounds, the lowest-energy entry that passed

@@ -13,6 +13,7 @@ in benchmarks/guided_search.py.
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 import numpy as np
 
@@ -23,6 +24,27 @@ from repro.core.schedule import Schedule
 
 
 _MEMO_MAX = 65536
+
+
+def fit_greed(improvements: Sequence[float], default: float = 0.5,
+              lo: float = 0.1, hi: float = 0.9) -> float:
+    """Fit the guided policy's greed on accumulated accepted-move data.
+
+    ``improvements`` are the relative improvements of past *accepted* search
+    outcomes for a kernel (``AnnealResult.improvement`` of runs whose best
+    passed the gate — what :class:`~repro.autotune.history.TuneHistory`
+    accumulates across sessions).  The order statistic used is the fraction
+    of accepted runs that actually improved on their start: when the cost
+    model's greedy proposals have historically paid off, lean harder on them
+    (greed toward ``hi``); when accepted moves mostly came from the uniform
+    fallback (improvements ~0), drift back toward exploration (``lo``).
+    With no history the caller's ``default`` stands.
+    """
+    xs = [float(v) for v in improvements if np.isfinite(v)]
+    if not xs:
+        return default
+    win_rate = sum(1 for v in xs if v > 0) / len(xs)
+    return float(np.clip(lo + (hi - lo) * win_rate, lo, hi))
 
 
 @dataclasses.dataclass

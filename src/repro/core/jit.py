@@ -80,6 +80,23 @@ class TuneConfig:
         return self
 
 
+def check_space_compat(schedule: Schedule, space: SearchSpace, *,
+                       kernel: str = "?") -> Schedule:
+    """Raise unless ``schedule``'s knobs are a legal point of ``space``.
+
+    The guard behind warm starting: a schedule recalled from history was
+    tuned for SOME signature's space; seeding a different kernel/signature
+    with it must fail loudly rather than search from an unrepresentable
+    state (tests/test_autotune.py holds ``TuneHistory.warm_start`` to never
+    producing one)."""
+    if not space.contains(schedule.knobs):
+        legal = {k.name: k.choices for k in space.knobs}
+        raise ValueError(
+            f"warm-start schedule {schedule.knobs!r} is not a point of "
+            f"kernel {kernel!r}'s knob space {legal!r}")
+    return schedule
+
+
 def _make_policy(config: TuneConfig, space: SearchSpace,
                  program_for: Callable[[Schedule], Program]) -> MutationPolicy:
     """The proposal policy a tune run uses — guided when config.guided."""
@@ -155,17 +172,27 @@ class SipKernel:
     def tune(self, example_args: Sequence[Any],
              config: TuneConfig | None = None,
              verbose: bool = False, *,
-             quarantine: MutableSet[str] | None = None
+             quarantine: MutableSet[str] | None = None,
+             x0: Schedule | None = None
              ) -> list[annealing.AnnealResult]:
         """Run the offline search.  ``quarantine`` (optional, caller-owned)
         collects the signatures of schedules whose evaluation crashed or
         blew ``config.eval_deadline_s`` — they score FAILED and are skipped
-        on re-proposal; ``TuningSession`` persists the set across resumes."""
+        on re-proposal; ``TuningSession`` persists the set across resumes.
+
+        ``x0`` warm-starts every chain from the given schedule instead of
+        the space default (the autotune history's nearest-tuned-neighbor
+        seam).  Its knobs must be legal points of THIS signature's search
+        space — an incompatible warm start raises instead of silently
+        searching the wrong space; a stale order is fine (resolution falls
+        back to the program default when lengths mismatch)."""
         config = TuneConfig() if config is None else config
         config.validate()
         static = self.static_of(*example_args)
         sig = self.sig_str(static)
         space = self._space_for(**static)
+        if x0 is not None:
+            check_space_compat(x0, space, kernel=self.name)
         specs = [testing.InputSpec(tuple(a.shape), a.dtype) for a in example_args]
         rng = np.random.default_rng(config.seed + 10_000)
 
@@ -224,7 +251,14 @@ class SipKernel:
             # and memoize=False restores per-revisit re-testing.
             guarded = energy_mod.CachedEnergy(guarded)
         policy = _make_policy(config, space, program_for)
-        x0 = self.default_schedule(static)
+        if x0 is None:
+            x0 = self.default_schedule(static)
+        else:
+            # merge over the defaults so knobs the neighbor never set keep
+            # their space defaults (a PARTIAL warm start is still legal)
+            knobs = dict(space.default_knobs())
+            knobs.update(x0.knobs)
+            x0 = dataclasses.replace(x0, knobs=knobs)
 
         results = []
         for r in range(config.rounds):

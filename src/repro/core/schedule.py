@@ -42,6 +42,15 @@ class SearchSpace:
                 return k
         raise KeyError(name)
 
+    def contains(self, knobs: Mapping[str, Any]) -> bool:
+        """True when every (name, value) is a legal point of this space —
+        the warm-start compatibility check: a schedule imported from another
+        signature's history may only seed a search here if its knobs all
+        exist in THIS space and sit on declared choices."""
+        by_name = {k.name: k.choices for k in self.knobs}
+        return all(name in by_name and value in by_name[name]
+                   for name, value in knobs.items())
+
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:

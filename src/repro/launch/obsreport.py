@@ -14,7 +14,11 @@ counters from the matching metrics snapshot.  ``--validate`` schema-checks
 the file instead (event shape + span nesting, see
 ``repro.obs.trace.validate_events``) and exits non-zero on any violation;
 ``--kind workloads`` treats the file as a ``WorkloadRecorder`` JSONL and
-summarizes (or validates) the recorded serving mix.
+summarizes (or validates) the recorded serving mix; ``--kind autotune``
+treats it as an autotune decision journal (``repro.autotune.log``) and
+reports promotions (with energy deltas vs the displaced incumbent),
+quarantines, warm-start hits, and evictions — or schema-checks it with
+``--validate``.
 """
 
 from __future__ import annotations
@@ -22,6 +26,7 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.autotune import log as autotune_log
 from repro.obs.recorder import WorkloadRecorder
 from repro.obs.trace import load_trace, validate_events
 
@@ -112,6 +117,48 @@ def validate_workloads(path: str) -> list[str]:
     return errors
 
 
+def summarize_autotune(events: list[dict]) -> list[str]:
+    """Activity report for an autotune decision journal: event-kind counts,
+    every promotion with its energy delta vs the incumbent it displaced,
+    quarantines, warm-start hits, evictions."""
+    kinds: dict[str, int] = {}
+    for ev in events:
+        kinds[str(ev.get("kind", "?"))] = kinds.get(str(ev.get("kind",
+                                                              "?")), 0) + 1
+    lines = ["  " + "  ".join(f"{k}={n}" for k, n in sorted(kinds.items()))
+             if kinds else "  (no events)"]
+    promos = [ev for ev in events if ev.get("kind") == "promoted"]
+    if promos:
+        lines.append(f"  {'kernel':<26}{'workload':<30}{'energy':>11}"
+                     f"{'vs incumbent':>14}")
+        per_kernel: dict[str, list[float]] = {}
+        for ev in promos:
+            inc = ev.get("incumbent_energy")
+            if isinstance(inc, (int, float)) and inc > 0:
+                d = (float(ev.get("energy", 0.0)) / inc - 1.0) * 100
+                per_kernel.setdefault(str(ev.get("kernel", "?")),
+                                      []).append(d)
+                delta = f"{d:+.1f}%"
+            else:
+                delta = "(untuned)"
+            lines.append(f"  {str(ev.get('kernel', '')):<26}"
+                         f"{str(ev.get('workload', '')):<30}"
+                         f"{float(ev.get('energy', 0.0)):>11.4g}{delta:>14}")
+        for kernel, deltas in sorted(per_kernel.items()):
+            lines.append(f"  {kernel}: mean energy delta "
+                         f"{sum(deltas) / len(deltas):+.1f}% over "
+                         f"{len(deltas)} re-promotion(s)")
+    for ev in events:
+        if ev.get("kind") == "quarantined":
+            lines.append(f"  QUARANTINED {ev.get('kernel')}"
+                         f"/{ev.get('workload')}: {ev.get('reason')} "
+                         f"(max_err={ev.get('max_err', 0)})")
+    warm = sum(1 for ev in events if ev.get("kind") == "warm_start")
+    evictions = sum(1 for ev in events if ev.get("kind") == "evicted")
+    lines.append(f"  warm-start hits: {warm}   evictions: {evictions}")
+    return lines
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("path", help="trace file (.json Chrome trace or JSONL) "
@@ -119,7 +166,7 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--validate", action="store_true",
                     help="schema-check instead of summarizing; non-zero "
                          "exit on any violation")
-    ap.add_argument("--kind", choices=("trace", "workloads"),
+    ap.add_argument("--kind", choices=("trace", "workloads", "autotune"),
                     default="trace")
     ap.add_argument("--metrics-json", default=None,
                     help="metrics snapshot to summarize alongside the trace")
@@ -130,6 +177,12 @@ def main(argv: list[str] | None = None) -> int:
     if args.validate:
         if args.kind == "workloads":
             errors = validate_workloads(args.path)
+        elif args.kind == "autotune":
+            try:
+                errors = autotune_log.validate_events(
+                    autotune_log.load_events(args.path))
+            except (OSError, ValueError) as e:
+                errors = [f"{args.path}: unreadable journal ({e})"]
         else:
             try:
                 errors = validate_events(load_trace(args.path))
@@ -147,6 +200,14 @@ def main(argv: list[str] | None = None) -> int:
         rec = WorkloadRecorder.load(args.path)
         print(f"[obsreport] workload mix from {args.path}")
         print(json.dumps(rec.summary(), indent=1))
+        return 0
+
+    if args.kind == "autotune":
+        events = autotune_log.load_events(args.path)
+        print(f"[obsreport] autotune journal {args.path}: "
+              f"{len(events)} events")
+        for line in summarize_autotune(events):
+            print(line)
         return 0
 
     events = load_trace(args.path)

@@ -25,6 +25,14 @@ SIP-tuned schedules from the store ``repro.launch.tune`` persisted.
 ``--static`` runs the same stream through the static-batch baseline engine
 for comparison.
 
+``--autotune`` (requires ``--sip-cache``) runs the always-on tuning service
+(``repro.autotune``) on a background thread: every ``--autotune-interval``
+seconds it drains the live mix, tunes up to ``--autotune-budget`` workloads
+in a shadow store, gates candidates through the correctness sweep + energy
+margin, and commits winners into the live cache — the engine hot-swaps them
+on its next step, no restart.  Decisions journal to ``--autotune-log``
+(summarize with ``repro.launch.obsreport --kind autotune``).
+
 ``--paged`` serves from the paged KV cache (``repro.serve.pages``): add
 ``--page-size``/``--num-pages`` to set the pool, ``--prefill-chunk N`` to
 interleave long-prompt prefill with decode, ``--no-prefix-cache`` /
@@ -198,7 +206,23 @@ def main() -> None:
     ap.add_argument("--sip-cache", default=None,
                     help="tuned-schedule store to serve from (see "
                          "repro.launch.tune)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the always-on autotune service alongside the "
+                         "engine: tune the live mix, gate, hot-swap winners "
+                         "into --sip-cache (see repro.autotune)")
+    ap.add_argument("--autotune-interval", type=float, default=10.0,
+                    help="seconds between autotune cycles")
+    ap.add_argument("--autotune-budget", type=int, default=2,
+                    help="workloads tuned per autotune cycle")
+    ap.add_argument("--autotune-log", default=None,
+                    help="autotune decision journal JSONL (default: "
+                         "<sip-cache>.autotune.jsonl)")
     args = ap.parse_args()
+    if args.autotune and not args.sip_cache:
+        ap.error("--autotune requires --sip-cache (a live store to promote "
+                 "into)")
+    if args.autotune and args.static:
+        ap.error("--autotune requires the continuous engine (drop --static)")
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     if args.use_pallas:
@@ -234,8 +258,32 @@ def main() -> None:
     # kernel resolution happens at trace time, so the cache scope must wrap
     # the serve loop (late-binding registry handles honor it from then on)
     tracer = obs.Tracer() if args.trace else None
-    recorder = obs.WorkloadRecorder() if args.record_workloads else None
+    # streaming mode: records hit the JSONL as they happen, so an external
+    # autotune daemon can tail the file while this process serves
+    recorder = (obs.WorkloadRecorder(args.record_workloads)
+                if args.record_workloads
+                else obs.WorkloadRecorder() if args.autotune else None)
     reg = obs.MetricsRegistry()
+    service = None
+    if args.autotune:
+        from repro.autotune import (AutotuneConfig, AutotuneService,
+                                    EventLog, TuneHistory, recorder_source,
+                                    serve_targets)
+        from repro.core.registry import cache_for_path
+        from repro.tuning.state import SearchState
+        state_path = args.sip_cache + ".autotune.state.json"
+        service = AutotuneService(
+            cache_for_path(args.sip_cache),
+            source=recorder_source(recorder),
+            target_for=serve_targets(cfg, scfg),
+            config=AutotuneConfig(interval_s=args.autotune_interval,
+                                  budget=args.autotune_budget),
+            history=TuneHistory(args.sip_cache + ".history.json"),
+            state=(SearchState.load(state_path)
+                   or SearchState(path=state_path)),
+            log=EventLog(args.autotune_log
+                         or args.sip_cache + ".autotune.jsonl"),
+            obs=reg)
     with contextlib.ExitStack() as stack:
         if args.sip_cache:
             stack.enter_context(schedule_cache(args.sip_cache))
@@ -250,8 +298,17 @@ def main() -> None:
             ceng = ContinuousEngine(params, cfg, scfg,
                                     example_extra=extras[0] if extras
                                     else None, obs=reg, recorder=recorder)
-            report = drive_continuous(ceng, traffic, prompts, extras)
+            if service is not None:
+                service.start()
+            try:
+                report = drive_continuous(ceng, traffic, prompts, extras)
+            finally:
+                if service is not None:
+                    service.stop()
+                    service.log.close()
             print(f"[serve:continuous] {json.dumps(report)}")
+            if service is not None:
+                print(f"[serve] autotune: {json.dumps(service.metrics())}")
     if tracer is not None:
         tracer.save(args.trace)
         print(f"[serve] trace written to {args.trace}")
@@ -259,9 +316,10 @@ def main() -> None:
         reg.save_json(args.metrics_json)
         print(f"[serve] metrics snapshot written to {args.metrics_json}")
     if recorder is not None:
-        recorder.save(args.record_workloads)
-        print(f"[serve] workload mix ({len(recorder)} records) written to "
-              f"{args.record_workloads}")
+        recorder.close()
+        if args.record_workloads:
+            print(f"[serve] workload mix ({len(recorder)} records) written "
+                  f"to {args.record_workloads}")
 
 
 if __name__ == "__main__":

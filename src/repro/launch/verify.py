@@ -27,19 +27,33 @@ from repro.core.registry import registry, schedule_cache, workload_seed
 from repro.core.testing import InputSpec, probabilistic_test
 
 
-def verify_workload(spec, workload, *, samples: int, seed: int) -> dict:
-    """Test one (kernel, workload) pair through the deployment path."""
+def verify_workload(spec, workload, *, samples: int, seed: int,
+                    schedule=None) -> dict:
+    """Test one (kernel, workload) pair through the deployment path.
+
+    With ``schedule`` (a :class:`~repro.core.schedule.Schedule`) the sweep
+    runs a CANDIDATE instead: the kernel is built directly from that
+    schedule, bypassing cache resolution — the seam ``repro.autotune.gate``
+    uses so a schedule is probabilistically verified BEFORE promotion makes
+    it the deployment path."""
     rng = np.random.default_rng(
         workload_seed(spec.name, workload.name, seed) ^ 0x5EED)
     example = workload.make_args(rng)
     input_specs = [InputSpec(tuple(np.asarray(a).shape), np.asarray(a).dtype)
                    for a in example]
-    kern = registry.get(spec.name)      # honors the active schedule_cache
-    static = kern.static_of(*example)
-    tuned = kern.cache.best(spec.name, kern.sig_str(static)) is not None
-    report = probabilistic_test(kern, spec.oracle, input_specs, samples, rng)
+    if schedule is not None:
+        static = spec.signature_fn(*example)
+        fn = spec.build(schedule, **static)
+        which = "candidate"
+    else:
+        kern = registry.get(spec.name)  # honors the active schedule_cache
+        static = kern.static_of(*example)
+        tuned = kern.cache.best(spec.name, kern.sig_str(static)) is not None
+        fn = kern
+        which = "tuned" if tuned else "default"
+    report = probabilistic_test(fn, spec.oracle, input_specs, samples, rng)
     return {"kernel": spec.name, "workload": workload.name,
-            "schedule": "tuned" if tuned else "default",
+            "schedule": which,
             "passed": report.passed, "samples": report.samples_run,
             "max_err": report.max_err}
 

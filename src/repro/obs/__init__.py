@@ -20,14 +20,15 @@ from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                active_registry, counter, default_registry,
                                exponential_edges, gauge, histogram,
                                metrics_scope)
-from repro.obs.recorder import WorkloadKey, WorkloadRecorder
+from repro.obs.recorder import WorkloadKey, WorkloadRecorder, tail_jsonl
 from repro.obs.trace import (Tracer, active_tracer, instant, load_trace,
                              span, tracing, validate_events, validate_trace)
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "active_registry",
     "counter", "default_registry", "exponential_edges", "gauge", "histogram",
-    "metrics_scope", "WorkloadKey", "WorkloadRecorder", "Tracer",
+    "metrics_scope", "WorkloadKey", "WorkloadRecorder", "tail_jsonl",
+    "Tracer",
     "active_tracer", "instant", "load_trace", "span", "tracing",
     "validate_events", "validate_trace",
 ]

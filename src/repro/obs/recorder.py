@@ -61,6 +61,7 @@ class WorkloadRecorder:
         self._lock = threading.Lock()
         self._records: list[dict] = []
         self._counts: dict[WorkloadKey, int] = {}
+        self._last_t: dict[WorkloadKey, float] = {}
         self.dropped = 0
         self.max_records = max_records
         self._file = open(jsonl_path, "w") if jsonl_path else None
@@ -80,6 +81,7 @@ class WorkloadRecorder:
                           batch=rec["batch"], dtype=rec["dtype"])
         with self._lock:
             self._counts[key] = self._counts.get(key, 0) + 1
+            self._last_t[key] = rec["t"]
             if len(self._records) < self.max_records:
                 self._records.append(rec)
             else:
@@ -101,6 +103,22 @@ class WorkloadRecorder:
         past the raw-record cap)."""
         with self._lock:
             return dict(self._counts)
+
+    def mix_snapshot(self) -> dict[WorkloadKey, tuple[int, float]]:
+        """Drain surface for live consumers (the autotune service): key ->
+        (cumulative count, last-seen t).  Like :meth:`mix` this is complete
+        past the raw-record cap, so a consumer that diffs successive
+        snapshots sees every dispatch — including ones whose raw record was
+        dropped — and can staleness-weight each key by when it last fired."""
+        with self._lock:
+            return {k: (n, self._last_t.get(k, 0.0))
+                    for k, n in self._counts.items()}
+
+    @property
+    def clock(self) -> float:
+        """Seconds since the recorder started — the timebase of every
+        record's ``t`` (and of :meth:`mix_snapshot`'s last-seen times)."""
+        return time.perf_counter() - self._t0
 
     def summary(self) -> dict[str, Any]:
         """JSON-able aggregate view (what obsreport renders)."""
@@ -172,3 +190,34 @@ class WorkloadRecorder:
             out.append(Workload(name=key.name, make_args=make_args,
                                 suites=suites))
         return out
+
+
+def tail_jsonl(path: str, offset: int = 0) -> tuple[list[dict], int]:
+    """Incrementally read recorder records appended to ``path`` since byte
+    ``offset`` — the cross-process drain the autotune daemon uses to follow
+    a serving process's ``--record-workloads`` stream.
+
+    Returns ``(records, new_offset)``.  A trailing line without a newline is
+    assumed mid-write and left for the next call (its bytes are not
+    consumed); a complete-but-corrupt line is skipped, not fatal.  A missing
+    file (the server has not started writing yet) yields ``([], offset)``.
+    """
+    try:
+        f = open(path, "rb")
+    except FileNotFoundError:
+        return [], offset
+    records: list[dict] = []
+    with f:
+        f.seek(offset)
+        buf = f.read()
+    end = buf.rfind(b"\n")
+    if end < 0:
+        return [], offset
+    for line in buf[:end].splitlines():
+        if not line.strip():
+            continue
+        try:
+            records.append(json.loads(line))
+        except json.JSONDecodeError:
+            continue
+    return records, offset + end + 1

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.registry import active_schedule_cache
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.obs import metrics as obs_metrics
@@ -186,7 +187,8 @@ class Request:
 _STAT_KEYS = ("prefill_s", "decode_s", "tokens_out", "prefill_tokens",
               "submitted", "admitted", "completed", "steps", "decode_steps",
               "occupancy_sum", "queue_depth_sum", "prefill_compiles",
-              "prefix_hits", "prefix_tokens_saved", "chunk_steps")
+              "prefix_hits", "prefix_tokens_saved", "chunk_steps",
+              "schedule_swaps")
 
 
 @dataclasses.dataclass
@@ -278,8 +280,9 @@ class ContinuousEngine:
                          else scfg.capacity * self._n_slot_pages + 1)
             # page 0 is the trash page: a freed/idle slot's zeroed page-table
             # row makes its masked decode scatters land there harmlessly
-            self.pages = PagePool(num_pages, ps)
-            self.prefix = PrefixCache(self.pages) if scfg.prefix_cache else None
+            self.pages = PagePool(num_pages, ps, obs=self.obs)
+            self.prefix = (PrefixCache(self.pages, obs=self.obs)
+                           if scfg.prefix_cache else None)
             self.caches, self._axes = M.alloc_paged_caches(
                 params, cfg, scfg.capacity, scfg.max_len, ps, num_pages,
                 example_inputs)
@@ -290,6 +293,42 @@ class ContinuousEngine:
             self._chunk_tasks: collections.deque[_ChunkTask] = \
                 collections.deque()
             self._prefilling: set[int] = set()
+        else:
+            self.caches, self._axes = M.alloc_slot_caches(
+                params, cfg, scfg.capacity, scfg.max_len, example_inputs)
+        self._make_dispatchers()
+        # schedule hot-swap: kernel handles are late-binding, but jax.jit
+        # memoizes traces by shape — a ScheduleCache version bump alone never
+        # reaches an already-traced dispatch.  The engine snapshots the
+        # active store's version here and _maybe_refresh_schedules() rebuilds
+        # the jit wrappers when it moves, so the NEXT trace re-resolves every
+        # kernel from the updated store (restart-free promotion; see
+        # repro.autotune).
+        self._sched_cache = active_schedule_cache()
+        self._sched_version = (self._sched_cache.version
+                               if self._sched_cache is not None else 0)
+        self.tokens = np.zeros(scfg.capacity, np.int32)   # next decode inputs
+        self._key = jax.random.PRNGKey(scfg.seed)
+        self._uid = 0
+        self._prefill_shapes_seen: set[tuple] = set()
+        self._c = {k: self.obs.counter(f"serve.{k}") for k in _STAT_KEYS}
+        self._g_occupancy = self.obs.gauge("serve.occupancy")
+        self._g_queue_depth = self.obs.gauge("serve.queue_depth")
+        if self.paged:
+            self._g_page_occ = self.obs.gauge("serve.page_occupancy")
+        self._h_ttft = self.obs.histogram("serve.ttft_s")
+        self._h_itl = self.obs.histogram("serve.inter_token_s")
+        self._h_prefill = self.obs.histogram("serve.prefill_call_s")
+        self._h_decode = self.obs.histogram("serve.decode_step_s")
+        self._last_emit: dict[int, float] = {}   # uid -> last token time
+
+    def _make_dispatchers(self) -> None:
+        """(Re)create the jitted step functions.  Called at construction and
+        again on schedule hot-swap: fresh jax.jit wrappers mean fresh trace
+        caches, so every kernel re-resolves against the current
+        ScheduleCache contents on its next dispatch."""
+        cfg, scfg = self.cfg, self.scfg
+        if self.paged:
             # paged prefill compiles once per page-rounded prompt length (or
             # per chunk shape) — these jits are keyed by that rounded length
             self._prefill_by_len: dict[int, Any] = {}
@@ -308,8 +347,6 @@ class ContinuousEngine:
                 M.prefill_chunk, cfg=cfg, axes=self._axes),
                 donate_argnums=(1,))
         else:
-            self.caches, self._axes = M.alloc_slot_caches(
-                params, cfg, scfg.capacity, scfg.max_len, example_inputs)
             self._prefill = jax.jit(functools.partial(
                 M.prefill, cfg=cfg, max_len=scfg.max_len))
             # the slot batch is donated through decode and insert, so the
@@ -322,20 +359,23 @@ class ContinuousEngine:
                 lambda caches, grp, slots: M.insert_slots(caches, grp, slots,
                                                           self._axes),
                 donate_argnums=(0,))
-        self.tokens = np.zeros(scfg.capacity, np.int32)   # next decode inputs
-        self._key = jax.random.PRNGKey(scfg.seed)
-        self._uid = 0
-        self._prefill_shapes_seen: set[tuple] = set()
-        self._c = {k: self.obs.counter(f"serve.{k}") for k in _STAT_KEYS}
-        self._g_occupancy = self.obs.gauge("serve.occupancy")
-        self._g_queue_depth = self.obs.gauge("serve.queue_depth")
-        if self.paged:
-            self._g_page_occ = self.obs.gauge("serve.page_occupancy")
-        self._h_ttft = self.obs.histogram("serve.ttft_s")
-        self._h_itl = self.obs.histogram("serve.inter_token_s")
-        self._h_prefill = self.obs.histogram("serve.prefill_call_s")
-        self._h_decode = self.obs.histogram("serve.decode_step_s")
-        self._last_emit: dict[int, float] = {}   # uid -> last token time
+
+    def _maybe_refresh_schedules(self) -> None:
+        """Pick up ScheduleCache changes without a restart: when the store
+        the engine was constructed under has a newer version (an autotune
+        promotion, or a tuning session sharing the store), drop every traced
+        dispatch and rebuild, so subsequent prefills/decodes trace against
+        the new schedules.  KV caches, page tables, slots and in-flight
+        requests are untouched — only the compiled functions turn over."""
+        cache = self._sched_cache
+        if cache is None or not cache.changed_since(self._sched_version):
+            return
+        self._sched_version = cache.version
+        self._c["schedule_swaps"].inc()
+        # compile accounting restarts with the trace caches
+        self._prefill_shapes_seen.clear()
+        self._make_dispatchers()
+        obs_trace.instant("serve.schedule_swap", version=cache.version)
 
     # -------------------------------------------------------------- ingress
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
@@ -415,6 +455,7 @@ class ContinuousEngine:
         """Admit + prefill waiting requests into free slots, then run one
         lockstep decode over the occupied batch.  Returns requests that
         finished during this step."""
+        self._maybe_refresh_schedules()
         finished: list[Request] = []
         if self.paged:
             self._admit_paged(finished)

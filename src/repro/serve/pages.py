@@ -38,6 +38,8 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 
 class PagesExhausted(RuntimeError):
     """Raised under the ``reject`` admission policy when a request cannot be
@@ -55,7 +57,8 @@ class PagePool:
     """
 
     def __init__(self, num_pages: int, page_size: int,
-                 reserved: Sequence[int] = (0,)):
+                 reserved: Sequence[int] = (0,),
+                 obs: obs_metrics.MetricsRegistry | None = None):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1, got {page_size}")
         self._reserved = frozenset(reserved)
@@ -68,6 +71,20 @@ class PagePool:
         # pop() -> lowest id; kept sorted descending like SlotPool's free list
         self._free = sorted((i for i in range(num_pages)
                              if i not in self._reserved), reverse=True)
+        # optional telemetry (repro.obs): the engine passes its registry so
+        # pool occupancy shares one surface with the serve.* metrics.
+        # `is not None`, not truthiness: an empty registry is falsy (len 0)
+        has_obs = obs is not None
+        self._g_occ = (obs.gauge("serve.page_pool.occupancy")
+                       if has_obs else None)
+        self._c_alloc = (obs.counter("serve.page_pool.alloc_pages")
+                         if has_obs else None)
+        self._c_freed = (obs.counter("serve.page_pool.freed_pages")
+                         if has_obs else None)
+
+    def _observe(self) -> None:
+        if self._g_occ is not None:
+            self._g_occ.set(self.used_pages / self.usable_pages)
 
     # ---------------------------------------------------------- allocation
     def alloc(self, n: int) -> list[int] | None:
@@ -81,6 +98,9 @@ class PagePool:
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             self._ref[p] = 1
+        if self._c_alloc is not None and pages:
+            self._c_alloc.inc(len(pages))
+        self._observe()
         return pages
 
     def retain(self, pages: int | Iterable[int]) -> None:
@@ -108,6 +128,9 @@ class PagePool:
             # free-list invariant even when a double-free raises mid-batch
             if freed:
                 self._free.sort(reverse=True)
+                if self._c_freed is not None:
+                    self._c_freed.inc(freed)
+                self._observe()
         return freed
 
     def cow(self, page: int) -> int | None:
@@ -195,12 +218,28 @@ class PrefixCache:
     actually returned to the free list.
     """
 
-    def __init__(self, pool: PagePool):
+    def __init__(self, pool: PagePool,
+                 obs: obs_metrics.MetricsRegistry | None = None):
         self.pool = pool
         self._entries: dict[bytes, _PrefixEntry] = {}
         self._clock = 0
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        # optional telemetry (repro.obs), same registry surface as serve.*
+        # (`is not None`: an empty registry is falsy)
+        has_obs = obs is not None
+        self._c_hits = (obs.counter("serve.prefix_cache.hits")
+                        if has_obs else None)
+        self._c_misses = (obs.counter("serve.prefix_cache.misses")
+                          if has_obs else None)
+        self._c_evictions = (obs.counter("serve.prefix_cache.evictions")
+                             if has_obs else None)
+        self._c_evicted_pages = (obs.counter("serve.prefix_cache."
+                                             "evicted_pages")
+                                 if has_obs else None)
+        self._g_entries = (obs.gauge("serve.prefix_cache.entries")
+                           if has_obs else None)
 
     def _keys(self, tokens: np.ndarray) -> list[bytes]:
         """Chain-hash keys for every *shareable* full block of ``tokens``."""
@@ -234,8 +273,12 @@ class PrefixCache:
         if keys:
             if pages:
                 self.hits += 1
+                if self._c_hits is not None:
+                    self._c_hits.inc()
             else:
                 self.misses += 1
+                if self._c_misses is not None:
+                    self._c_misses.inc()
         return pages
 
     def insert(self, tokens: np.ndarray, pages: Sequence[int]) -> int:
@@ -257,6 +300,8 @@ class PrefixCache:
             self.pool.retain(page)
             self._entries[key] = _PrefixEntry(int(page), self._clock)
             added += 1
+        if self._g_entries is not None:
+            self._g_entries.set(len(self._entries))
         return added
 
     def evict(self, want_freed: int) -> int:
@@ -275,7 +320,15 @@ class PrefixCache:
             if not self.pool.writable(self._entries[key].page):
                 break  # best candidate still shared -> nothing reclaimable
             ent = self._entries.pop(key)
-            freed += self.pool.release(ent.page)
+            self.evictions += 1
+            if self._c_evictions is not None:
+                self._c_evictions.inc()
+            n = self.pool.release(ent.page)
+            freed += n
+            if self._c_evicted_pages is not None and n:
+                self._c_evicted_pages.inc(n)
+        if self._g_entries is not None:
+            self._g_entries.set(len(self._entries))
         return freed
 
     @property

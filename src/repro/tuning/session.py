@@ -198,9 +198,13 @@ class TuningSession:
         return runs
 
     def run_workload(self, kernel: str, workload: Workload,
-                     verbose: bool = False) -> WorkloadRun:
+                     verbose: bool = False, *,
+                     x0: Any | None = None) -> WorkloadRun:
         """Tune one (kernel, workload) pair, seeded independently of every
-        other pair in the session."""
+        other pair in the session.  ``x0`` (a :class:`Schedule`) warm-starts
+        the search from a known-good neighbor instead of the space default —
+        the autotune service's history seam; it must be compatible with the
+        workload's knob space (``SipKernel.tune`` raises otherwise)."""
         seed = workload_seed(kernel, workload.name, self.config.seed)
         args = list(workload.make_args(np.random.default_rng(seed)))
         kern = self._kernel(kernel)
@@ -215,7 +219,8 @@ class TuningSession:
                             workload=workload.name, seed=seed) as sp:
             results = kern.tune(args,
                                 dataclasses.replace(self.config, seed=seed),
-                                verbose=verbose, quarantine=quarantine)
+                                verbose=verbose, quarantine=quarantine,
+                                x0=x0)
             sp["best_energy"] = min(r.best_raw for r in results)
         obs_metrics.counter("tune.workloads").inc()
         best = min(r.best_raw for r in results)

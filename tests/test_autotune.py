@@ -1,0 +1,365 @@
+"""repro.autotune: the always-on tuning service and its parts.
+
+Distribution staleness math, cross-process stream tailing, history
+warm-starts (with the legality property the service's safety depends on),
+the promotion gate (margin, quarantine permanence — the acceptance
+criterion), batch commits (one version bump), and the full
+drain->tune->gate->promote->evict cycle against a real kernel.
+"""
+
+import json
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.autotune.gate import PromotionGate, incumbent_energy
+from repro.autotune.history import (TuneHistory, feature_distance,
+                                    features_of)
+from repro.autotune.log import EventLog, load_events, validate_events
+from repro.autotune.service import (AutotuneConfig, AutotuneService,
+                                    WorkloadDistribution, _fast_tune_config,
+                                    jsonl_source)
+from repro.core.cache import PendingPut, ScheduleCache
+from repro.core.registry import KernelSpec, Workload
+from repro.core.schedule import KnobSpec, Schedule, SearchSpace
+from repro.obs.recorder import WorkloadKey, tail_jsonl
+from repro.tuning.state import SearchState
+
+K1 = WorkloadKey(kind="prefill", prompt_len=16, batch=1, dtype="float32")
+K2 = WorkloadKey(kind="prefill", prompt_len=8, batch=2, dtype="float32")
+
+
+class TestWorkloadDistribution:
+    def test_update_is_monotonic(self):
+        """Re-delivery of an older cumulative snapshot never un-counts."""
+        dist = WorkloadDistribution(half_life_s=10.0)
+        dist.update({K1: (5, 2.0)})
+        dist.update({K1: (3, 1.0)})          # stale: lower count, older t
+        assert dist.weights(2.0)[K1] == pytest.approx(5.0)
+        dist.update({K1: (9, 4.0)})
+        assert dist.weights(4.0)[K1] == pytest.approx(9.0)
+
+    def test_staleness_halves_per_half_life(self):
+        dist = WorkloadDistribution(half_life_s=10.0)
+        dist.update({K1: (8, 0.0), K2: (8, 10.0)})
+        w = dist.weights(10.0)               # K1 is one half-life stale
+        assert w[K1] == pytest.approx(4.0)
+        assert w[K2] == pytest.approx(8.0)
+        shares = dist.shares(10.0)
+        assert sum(shares.values()) == pytest.approx(1.0)
+        assert shares[K2] == pytest.approx(2 * shares[K1])
+
+    def test_empty_shares(self):
+        assert WorkloadDistribution().shares(0.0) == {}
+
+
+class TestStreamTailing:
+    def test_tail_leaves_partial_line(self, tmp_path):
+        p = str(tmp_path / "mix.jsonl")
+        full = json.dumps({"kind": "prefill", "t": 1.0}) + "\n"
+        with open(p, "w") as f:
+            f.write(full * 2 + '{"kind": "pre')     # torn mid-write
+        recs, off = tail_jsonl(p, 0)
+        assert len(recs) == 2 and off == 2 * len(full)
+        with open(p, "a") as f:                      # writer finishes the line
+            f.write('fill", "t": 2.0}\n')
+        recs, off2 = tail_jsonl(p, off)
+        assert len(recs) == 1 and recs[0]["t"] == 2.0
+        assert tail_jsonl(p, off2) == ([], off2)     # drained
+
+    def test_tail_missing_file_and_corrupt_line(self, tmp_path):
+        assert tail_jsonl(str(tmp_path / "nope.jsonl"), 0) == ([], 0)
+        p = str(tmp_path / "mix.jsonl")
+        with open(p, "w") as f:
+            f.write('not json\n' + json.dumps({"kind": "decode"}) + "\n")
+        recs, _ = tail_jsonl(p, 0)
+        assert [r["kind"] for r in recs] == ["decode"]
+
+    def test_jsonl_source_accumulates_cumulative_snapshot(self, tmp_path):
+        p = str(tmp_path / "mix.jsonl")
+        src = jsonl_source(p)
+        assert src() == ({}, 0.0)
+        rec = {"kind": "prefill", "prompt_len": 16, "batch": 1,
+               "dtype": "float32"}
+        with open(p, "w") as f:
+            f.write(json.dumps({**rec, "t": 1.0}) + "\n")
+        snap, now = src()
+        assert snap[K1] == (1, 1.0) and now == 1.0
+        with open(p, "a") as f:
+            f.write(json.dumps({**rec, "t": 3.0}) + "\n")
+        snap, now = src()
+        assert snap[K1] == (2, 3.0) and now == 3.0   # cumulative, not delta
+
+
+SPACE = SearchSpace(knobs=(KnobSpec("bq", (4, 8)), KnobSpec("bk", (4, 8))))
+FEATS_16 = features_of({"sq": 16, "dtype": "float32"})
+FEATS_8 = features_of({"sq": 8, "dtype": "float32"})
+
+
+def _hist_record(hist, *, sig="s16", feats=FEATS_16, knobs=None, order=None,
+                 accepted=True, improvement=0.1):
+    hist.record(kernel="k", signature=sig, workload="w",
+                schedule=Schedule(knobs=knobs or {"bq": 8, "bk": 4},
+                                  order=order),
+                energy=1.0, improvement=improvement, accepted=accepted,
+                features=feats)
+
+
+class TestTuneHistory:
+    def test_roundtrip_and_corrupt_degrade(self, tmp_path):
+        p = str(tmp_path / "hist.json")
+        hist = TuneHistory(p)
+        _hist_record(hist)
+        again = TuneHistory(p)
+        assert len(again) == 1 and again.records[0].kernel == "k"
+        with open(p, "w") as f:
+            f.write("{broken")
+        assert len(TuneHistory(p)) == 0              # loud would kill service
+
+    def test_warm_start_exact_signature_keeps_order(self):
+        hist = TuneHistory()
+        _hist_record(hist, order=(1, 0, 2))
+        got = hist.warm_start("k", "s16", SPACE, FEATS_16)
+        assert got is not None and got.order == (1, 0, 2)
+
+    def test_warm_start_neighbor_strips_order(self):
+        """Orders index a specific program's instructions — a cross-shape
+        recall must drop them or the target kernel would mis-apply it."""
+        hist = TuneHistory()
+        _hist_record(hist, sig="s16", feats=FEATS_16, order=(1, 0, 2))
+        got = hist.warm_start("k", "s8", SPACE, FEATS_8)
+        assert got is not None and got.order is None
+        assert got.knobs == {"bq": 8, "bk": 4}       # knobs do transfer
+
+    def test_warm_start_nearest_neighbor_wins(self):
+        hist = TuneHistory()
+        _hist_record(hist, sig="s16", feats=FEATS_16, knobs={"bq": 8})
+        far = features_of({"sq": 4096, "dtype": "bfloat16"})
+        _hist_record(hist, sig="sfar", feats=far, knobs={"bq": 4})
+        got = hist.warm_start("k", "s8", SPACE, FEATS_8)
+        assert got.knobs == {"bq": 8}                # s16 is nearer than sfar
+
+    def test_warm_start_filters_illegal_and_unaccepted(self):
+        hist = TuneHistory()
+        _hist_record(hist, knobs={"bq": 999})            # not in SPACE
+        _hist_record(hist, knobs={"bq": 4}, accepted=False)
+        assert hist.warm_start("k", "s16", SPACE, FEATS_16) is None
+        assert hist.warm_start("other", "s16", SPACE, FEATS_16) is None
+
+    def test_greed_fits_per_kernel(self):
+        hist = TuneHistory()
+        for _ in range(8):
+            _hist_record(hist, improvement=0.4)
+        assert hist.greed_for("k") > 0.5             # wins -> greedier
+        assert hist.greed_for("unseen", default=0.7) == 0.7
+
+    @given(st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_warm_start_is_always_legal_for_target_space(self, seed):
+        """THE safety property: whatever junk history holds, a warm start is
+        always a point of the TARGET kernel's knob space, and carries an
+        instruction order only on an exact signature match."""
+        rng = np.random.default_rng(seed)
+        hist = TuneHistory()
+        for i in range(int(rng.integers(1, 6))):
+            knobs = {f"n{j}": int(rng.integers(0, 6))
+                     for j in range(int(rng.integers(0, 4)))}
+            order = (tuple(int(x) for x in rng.permutation(3))
+                     if rng.random() < 0.5 else None)
+            _hist_record(hist, sig=f"s{int(rng.integers(0, 3))}",
+                         feats={"x": float(rng.random())}, knobs=knobs,
+                         order=order, accepted=bool(rng.random() < 0.8))
+        target = SearchSpace(knobs=tuple(
+            KnobSpec(f"n{j}", tuple(range(int(rng.integers(1, 5)))))
+            for j in range(int(rng.integers(0, 4)))))
+        sig = f"s{int(rng.integers(0, 3))}"
+        got = hist.warm_start("k", sig, target, {"x": 0.5})
+        if got is not None:
+            assert target.contains(got.knobs)
+            if got.order is not None:
+                recs = [r for r in hist.records
+                        if r.accepted and r.signature == sig]
+                assert any(Schedule.from_json(r.schedule_json).order
+                           == got.order for r in recs)
+
+
+def _fake_spec(name="fake_id"):
+    """Identity kernel whose schedule can be wrong on purpose: the bad=1
+    knob adds 1.0, so verification against the identity oracle fails."""
+    space = SearchSpace(knobs=(KnobSpec("bad", (0, 1)),))
+    def build(schedule, **static):
+        off = float(schedule.knobs.get("bad", 0))
+        return lambda x: np.asarray(x) + off
+    return KernelSpec(name=name, build=build,
+                      program_for=lambda s, **st_: None,
+                      space_for=lambda **st_: space,
+                      oracle=lambda x: np.asarray(x),
+                      signature_fn=lambda x: {"n": int(np.asarray(x).shape[0])})
+
+
+WL = Workload(name="w",
+              make_args=lambda rng: [rng.standard_normal(8).astype(np.float32)],
+              suites=("live",))
+
+
+class TestPromotionGate:
+    def test_untuned_key_promotes_on_verify(self):
+        gate = PromotionGate(ScheduleCache(), samples=4)
+        d = gate.evaluate(_fake_spec(), WL, "sig", Schedule(knobs={"bad": 0}),
+                          1.0)
+        assert d.promoted and d.reason == "promoted" and d.samples == 4
+        assert d.incumbent_energy is None
+
+    def test_margin_vs_incumbent(self):
+        live = ScheduleCache()
+        live.put("fake_id", "sig", Schedule(knobs={"bad": 0}), 1.0,
+                 tests_passed=True)
+        assert incumbent_energy(live, "fake_id", "sig") == 1.0
+        gate = PromotionGate(live, margin=0.05, samples=2)
+        close = gate.evaluate(_fake_spec(), WL, "sig",
+                              Schedule(knobs={"bad": 0}), 0.97)
+        assert not close.promoted and close.reason == "insufficient_margin"
+        clear = gate.evaluate(_fake_spec(), WL, "sig",
+                              Schedule(knobs={"bad": 0}), 0.90)
+        assert clear.promoted
+
+    def test_failing_schedule_quarantined_and_never_promoted(self, tmp_path):
+        """Acceptance: a wrong-output candidate is quarantined, journaled,
+        and permanently blocked — even across a state reload, and even if it
+        later shows up with a winning energy."""
+        state = SearchState(path=str(tmp_path / "state.json"))
+        live = ScheduleCache()
+        gate = PromotionGate(live, samples=4, state=state)
+        bad = Schedule(knobs={"bad": 1})
+        d1 = gate.evaluate(_fake_spec(), WL, "sig", bad, 1e-9)
+        assert not d1.promoted and d1.reason == "verify_failed"
+        assert d1.max_err >= 1.0
+        assert live.version == 0                     # gate never touches live
+        # quarantine is now permanent: no second verification run
+        d2 = gate.evaluate(_fake_spec(), WL, "sig", bad, 1e-12)
+        assert not d2.promoted and d2.reason == "quarantined_prior"
+        reloaded = SearchState.load(str(tmp_path / "state.json"))
+        gate2 = PromotionGate(live, samples=4, state=reloaded)
+        d3 = gate2.evaluate(_fake_spec(), WL, "sig", bad, 1e-12)
+        assert not d3.promoted and d3.reason == "quarantined_prior"
+        assert incumbent_energy(live, "fake_id", "sig") is None
+
+
+class TestBatchCommit:
+    def test_commit_bumps_version_once(self, tmp_path):
+        cache = ScheduleCache(str(tmp_path / "c.json"))
+        v0 = cache.version
+        cache.commit([PendingPut(kernel_name="k", signature=f"s{i}",
+                                 schedule=Schedule(), energy=1.0,
+                                 tests_passed=True) for i in range(3)])
+        assert cache.version == v0 + 1
+        assert not cache.changed_since(cache.version)
+        assert cache.changed_since(v0)
+        assert len(ScheduleCache(str(tmp_path / "c.json"))._data) == 3
+
+    def test_empty_commit_is_a_noop(self):
+        cache = ScheduleCache()
+        v0 = cache.version
+        cache.commit([])
+        assert cache.version == v0 and not cache.changed_since(v0)
+
+
+# ---------------------------------------------------------------- e2e cycle
+ATTN = dict(b=1, hq=2, hkv=2, s=16, d=8)
+
+
+def _attn_target(key):
+    from repro.autotune.adapters import TuneTarget, _attn_args
+    from repro.kernels.flash_attention import ops as fa_ops
+    name = fa_ops.ensure_registered(causal=True, window=None)
+    return TuneTarget(name, Workload(
+        name=key.name,
+        make_args=_attn_args(key.batch, ATTN["hq"], ATTN["hkv"],
+                             key.prompt_len, ATTN["d"], key.dtype),
+        suites=("live",)))
+
+
+def _service(live, source, **over):
+    history = over.pop("history", None)
+    cfg = AutotuneConfig(budget=over.pop("budget", 2), samples=2,
+                         interval_s=1.0, share_floor=0.2,
+                         tune=_fast_tune_config(), **over)
+    return AutotuneService(live, source=source, target_for=_attn_target,
+                           config=cfg, history=history)
+
+
+class TestServiceCycle:
+    def test_full_cycle_promotes_with_one_version_bump(self):
+        keys = {K1: (10, 1.0), K2: (6, 1.0)}
+        svc = _service(ScheduleCache(), lambda: (keys, 2.0))
+        v0 = svc.live.version
+        summary = svc.run_once()
+        assert summary["tuned"] == 2 and summary["promoted"] == 2
+        # both promotions landed in ONE commit -> ONE engine re-trace
+        assert svc.live.version == v0 + 1
+        for key in (K1, K2):
+            kernel, sig = svc._promoted[key]
+            assert svc.live.best(kernel, sig) is not None
+        assert svc.metrics()["promotions"] == 2
+        assert validate_events(svc.log.events) == []
+        kinds = [e["kind"] for e in svc.log.events]
+        assert kinds.count("tuned") == 2 and kinds[-1] == "cycle"
+        assert len(svc.history) == 2                 # both gated runs journal
+
+    def test_eviction_below_share_floor(self):
+        feed = {"now": 2.0, "keys": {K1: (10, 1.0), K2: (10, 1.0)}}
+        svc = _service(ScheduleCache(),
+                       lambda: (feed["keys"], feed["now"]), budget=2)
+        svc.run_once()
+        assert len(svc._promoted) == 2
+        # K2 goes quiet for many half-lives; K1 keeps firing
+        feed["keys"] = {K1: (500, 5000.0), K2: (10, 1.0)}
+        feed["now"] = 5000.0
+        summary = svc.run_once()
+        assert summary["evicted"] == 1
+        assert K2 not in svc._promoted and K1 in svc._promoted
+        kernel, sig = svc._promoted[K1]
+        assert svc.live.best(kernel, sig) is not None
+        assert svc.metrics()["evictions"] == 1
+        assert any(e["kind"] == "evicted" for e in svc.log.events)
+
+    def test_warm_start_hits_across_services(self, tmp_path):
+        hist = TuneHistory(str(tmp_path / "hist.json"))
+        svc1 = _service(ScheduleCache(), lambda: ({K1: (10, 1.0)}, 2.0),
+                        budget=1, history=hist)
+        svc1.run_once()
+        assert svc1.metrics()["warm_start_hits"] == 0
+        # a fresh service (new session) over the SAME history warm-starts
+        svc2 = _service(ScheduleCache(),
+                        lambda: ({K1: (10, 1.0)}, 2.0), budget=1,
+                        history=TuneHistory(str(tmp_path / "hist.json")))
+        svc2.run_once()
+        assert svc2.metrics()["warm_start_hits"] == 1
+        assert any(e["kind"] == "warm_start" for e in svc2.log.events)
+
+    def test_unmappable_keys_skipped_once(self):
+        sub = WorkloadKey(kind="submit", prompt_len=0, batch=1, dtype="int32")
+        calls = []
+        def target_for(key):
+            calls.append(key)
+            return None
+        svc = AutotuneService(
+            ScheduleCache(), source=lambda: ({sub: (5, 1.0)}, 2.0),
+            target_for=target_for,
+            config=AutotuneConfig(samples=2, tune=_fast_tune_config()))
+        assert svc.run_once()["candidates"] == 0
+        assert svc.run_once()["candidates"] == 0
+        assert calls == [sub]                        # never re-asked
+
+    def test_event_log_journal_roundtrip(self, tmp_path):
+        p = str(tmp_path / "events.jsonl")
+        with EventLog(p) as log:
+            log.emit("cycle", cycle=1, candidates=0, tuned=0, promoted=0,
+                     quarantined=0)
+            with pytest.raises(ValueError, match="unknown autotune event"):
+                log.emit("nonsense")
+        events = load_events(p)
+        assert validate_events(events) == []
+        assert validate_events([{"kind": "promoted", "t": 1.0}]) != []

@@ -1,0 +1,170 @@
+"""Mid-stream schedule hot-swap: the restart-free deployment acceptance.
+
+A running ContinuousEngine polls its schedule store's version each step; a
+commit (an autotune promotion) makes it rebuild its jit dispatchers so the
+next trace resolves the new schedule.  These tests promote a legal
+non-default schedule for the exact serving shape WHILE requests are in
+flight and assert greedy outputs stay token-identical to single-request
+generation — in contiguous and paged modes — plus the paged obs wiring
+(pool occupancy gauge, prefix-cache counters).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import obs
+from repro.core.cache import PendingPut, ScheduleCache
+from repro.core.registry import registry, schedule_cache
+from repro.core.schedule import Schedule
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.models import model as M
+from repro.models import modules as nn
+from repro.models.config import ModelConfig
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
+
+# n_kv_heads == n_heads so the serving SDPA path dispatches the pallas
+# kernel directly (no grouped-head remap); use_pallas routes prefill
+# through the SIP flash-attention kernel — the thing being hot-swapped
+CFG = ModelConfig(name="hs", family="dense", n_layers=2, d_model=32,
+                  n_heads=2, n_kv_heads=2, d_ff=64, vocab=64,
+                  dtype="float32", use_pallas=True).validate()
+MAX_LEN = 32
+PLEN = 16
+
+
+@pytest.fixture(scope="module")
+def params():
+    return nn.unwrap(M.init_lm(jax.random.PRNGKey(0), CFG))
+
+
+@pytest.fixture(scope="module")
+def reference(params):
+    """Default-schedule single-request generation — outputs must be
+    identical before AND after the swap."""
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, CFG.vocab, PLEN).astype(np.int32),
+             int(rng.integers(4, 9))) for _ in range(4)]
+    ref = Engine(params, CFG, ServeConfig(max_len=MAX_LEN))
+    want = [ref.generate(p[None], n)[0] for p, n in reqs]
+    return reqs, want
+
+
+def _promote_prefill_schedule(store: ScheduleCache) -> Schedule:
+    """Commit a legal NON-default schedule for the exact prefill shape the
+    engine dispatches ((1, H, PLEN, hd) causal) — an autotune promotion."""
+    name = fa_ops.ensure_registered(causal=True, window=None)
+    kern = registry.get(name)
+    hd = CFG.d_model // CFG.n_heads
+    ex = [np.zeros((1, CFG.n_heads, PLEN, hd), np.float32)] * 3
+    static = kern.static_of(*ex)
+    space = registry.spec(name).space_for(**static)
+    knobs = {k.name: k.choices[-1] for k in space.knobs}
+    sched = Schedule(knobs=knobs)
+    assert knobs != space.default_knobs(), "swap must change the schedule"
+    store.commit([PendingPut(kernel_name=name, signature=kern.sig_str(static),
+                             schedule=sched, energy=1e-9, tests_passed=True,
+                             meta={"autotune": True})])
+    return sched
+
+
+def _run_with_midstream_swap(params, reqs, scfg):
+    store = ScheduleCache()
+    with schedule_cache(store):
+        eng = ContinuousEngine(params, CFG, scfg)
+        handles = [eng.submit(*reqs[j]) for j in (0, 1)]
+        for _ in range(3):                   # first two requests in flight
+            eng.step()
+        v0 = store.version
+        _promote_prefill_schedule(store)     # the hot-swap commit
+        assert store.changed_since(v0)
+        handles += [eng.submit(*reqs[j]) for j in (2, 3)]
+        out = eng.run(max_steps=10_000)
+    return eng, [out[h.uid] for h in handles]
+
+
+class TestHotSwapDifferential:
+    def test_contiguous_token_identical_across_swap(self, params, reference):
+        reqs, want = reference
+        eng, got = _run_with_midstream_swap(
+            params, reqs, ServeConfig(max_len=MAX_LEN, capacity=2))
+        assert eng.stats["schedule_swaps"] == 1
+        for j in range(len(reqs)):
+            np.testing.assert_array_equal(got[j], want[j],
+                                          err_msg=f"request {j}")
+
+    def test_paged_token_identical_across_swap(self, params, reference):
+        reqs, want = reference
+        eng, got = _run_with_midstream_swap(
+            params, reqs, ServeConfig(max_len=MAX_LEN, capacity=2,
+                                      paged=True, page_size=8))
+        assert eng.stats["schedule_swaps"] == 1
+        for j in range(len(reqs)):
+            np.testing.assert_array_equal(got[j], want[j],
+                                          err_msg=f"request {j} (paged)")
+
+    def test_swapped_schedule_actually_serves(self, params):
+        """The post-swap trace resolves the promoted schedule (not a stale
+        memo): the kernel's resolution version tracks the store's."""
+        store = ScheduleCache()
+        rng = np.random.default_rng(1)
+        prompt = rng.integers(0, CFG.vocab, PLEN).astype(np.int32)
+        with schedule_cache(store):
+            eng = ContinuousEngine(params, CFG,
+                                   ServeConfig(max_len=MAX_LEN, capacity=1))
+            h1 = eng.submit(prompt, 4)
+            out1 = eng.run(max_steps=10_000)[h1.uid]
+            sched = _promote_prefill_schedule(store)
+            h2 = eng.submit(prompt, 4)       # re-prefills through the swap
+            out2 = eng.run(max_steps=10_000)[h2.uid]
+            np.testing.assert_array_equal(out1, out2)
+            name = fa_ops.ensure_registered(causal=True, window=None)
+            kern = registry.get(name)
+            assert kern._resolved_version == store.version
+            hd = CFG.d_model // CFG.n_heads
+            ex = [np.zeros((1, CFG.n_heads, PLEN, hd), np.float32)] * 3
+            best = store.best(name, kern.sig_str(kern.static_of(*ex)))
+            assert best is not None and best.knobs == sched.knobs
+        assert eng.stats["schedule_swaps"] == 1
+
+    def test_no_swap_without_commit(self, params, reference):
+        reqs, _ = reference
+        with schedule_cache(ScheduleCache()):
+            eng = ContinuousEngine(params, CFG,
+                                   ServeConfig(max_len=MAX_LEN, capacity=2))
+            for j in range(2):
+                eng.submit(*reqs[j])
+            eng.run(max_steps=10_000)
+        assert eng.stats["schedule_swaps"] == 0
+
+
+class TestPagedObsWiring:
+    def test_pool_and_prefix_metrics_registered(self, params, reference):
+        reqs, _ = reference
+        reg = obs.MetricsRegistry()
+        eng = ContinuousEngine(params, CFG,
+                               ServeConfig(max_len=MAX_LEN, capacity=2,
+                                           paged=True, page_size=8),
+                               obs=reg)
+        # shared prefix: the same prompt resubmitted AFTER its first prefill
+        # landed in the cache -> a hit on the second pass
+        eng.submit(*reqs[0])
+        for _ in range(2):
+            eng.step()
+        eng.submit(*reqs[0])
+        eng.submit(*reqs[1])
+        eng.run(max_steps=10_000)
+        snap = reg.snapshot()
+        for name in ("serve.page_pool.occupancy", "serve.page_pool.alloc_pages",
+                     "serve.page_pool.freed_pages", "serve.prefix_cache.hits",
+                     "serve.prefix_cache.misses", "serve.prefix_cache.entries",
+                     "serve.prefix_cache.evictions"):
+            assert name in snap, f"missing metric {name}"
+        assert snap["serve.page_pool.alloc_pages"]["value"] > 0
+        assert snap["serve.prefix_cache.hits"]["value"] >= 1
+        assert snap["serve.prefix_cache.misses"]["value"] >= 1
+        # all requests done -> pool drained back to the prefix-cache pages
+        assert snap["serve.page_pool.occupancy"]["value"] < 1.0
