@@ -25,6 +25,11 @@ Two paged-specific sections:
   prefill must keep the shorts' TTFT p99 no worse than the contiguous
   engine, whose monolithic long prefills stall the admission step.
 
+A ``mesh`` axis reports tensor-parallel serving throughput (contiguous and
+paged) at each of ``MESH_SHAPES`` device counts — each shape runs in a
+subprocess with ``--xla_force_host_platform_device_count`` because this
+process's jax is already initialized single-device.
+
 ``python benchmarks/serve_throughput.py`` writes ``BENCH_serve.json``;
 ``--smoke`` shrinks the model and stream for CI.
 """
@@ -71,9 +76,9 @@ def _traffic(full: bool, rng: np.random.Generator, vocab: int):
 REPS = 3        # timed repetitions; best-of-N suppresses machine noise
 
 
-def _run_continuous(params, cfg, scfg, prompts, budgets):
+def _run_continuous(params, cfg, scfg, prompts, budgets, mesh=None):
     from repro.serve.engine import ContinuousEngine
-    eng = ContinuousEngine(params, cfg, scfg)
+    eng = ContinuousEngine(params, cfg, scfg, mesh=mesh)
     wall = float("inf")
     for rep in range(1 + REPS):             # pass 0 warms jit caches
         for p, n in zip(prompts, budgets):
@@ -125,9 +130,9 @@ def _paged_scfg(scfg, capacity=None, num_pages=None):
         num_pages=num_pages)
 
 
-def _run_paged(params, cfg, scfg, prompts, budgets):
+def _run_paged(params, cfg, scfg, prompts, budgets, mesh=None):
     from repro.serve.engine import ContinuousEngine
-    eng = ContinuousEngine(params, cfg, _paged_scfg(scfg))
+    eng = ContinuousEngine(params, cfg, _paged_scfg(scfg), mesh=mesh)
     wall = float("inf")
     for rep in range(1 + REPS):             # pass 0 warms jit caches
         for p, n in zip(prompts, budgets):
@@ -230,6 +235,59 @@ def _ttft_mixed(params, cfg, scfg, full: bool) -> dict:
     return out
 
 
+MESH_SHAPES = (2, 4)   # tensor-parallel widths benchmarked per run
+
+
+def _mesh_args(full: bool):
+    from repro.serve.engine import ServeConfig
+    params, cfg = _model(full)
+    rng = np.random.default_rng(0)
+    prompts, budgets = _traffic(full, rng, cfg.vocab)
+    scfg = ServeConfig(max_len=max(len(p) for p in prompts) + max(budgets),
+                       capacity=CAPACITY if full else 4)
+    return params, cfg, scfg, prompts, budgets
+
+
+def _mesh_one(full: bool, n: int) -> dict:
+    """Subprocess entry: the bench stream served tensor-parallel over an
+    n-device ("model",) mesh — contiguous and paged.  Runs out-of-process
+    because multi-device CPU needs XLA_FLAGS set before jax initializes."""
+    from repro.dist import tp
+    from repro.launch.mesh import mesh_for
+    params, cfg, scfg, prompts, budgets = _mesh_args(full)
+    mesh = mesh_for((n,), ("model",))
+    ok, reason = tp.tp_eligible(cfg, n)
+    out = {"devices": n, "tp_path": "shard_map" if ok else "gspmd",
+           "tp_reason": reason}
+    out["continuous"] = _run_continuous(params, cfg, scfg, prompts, budgets,
+                                        mesh=mesh)
+    out["paged"] = _run_paged(params, cfg, scfg, prompts, budgets, mesh=mesh)
+    return out
+
+
+def _bench_mesh(full: bool) -> dict:
+    """Fan the mesh shapes out to subprocesses (this process's jax is
+    already initialized single-device); one JSON line back per shape."""
+    import os
+    import subprocess
+    import sys
+    out = {}
+    for n in MESH_SHAPES:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--_mesh-one", str(n)]
+        if not full:
+            cmd.append("--smoke")
+        r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=3600)
+        if r.returncode != 0:
+            out[f"mesh{n}"] = {"error": r.stderr[-1000:]}
+            continue
+        out[f"mesh{n}"] = json.loads(r.stdout.strip().splitlines()[-1])
+    return out
+
+
 def _differential(params, cfg, scfg, prompts, budgets) -> dict:
     """Greedy token-identity vs single-request generate, 3 arrival orders."""
     from repro.serve.engine import ContinuousEngine, Engine
@@ -269,13 +327,14 @@ def bench(full: bool = True) -> dict:
     paged = _run_paged(params, cfg, scfg, prompts, budgets)
     cap = _capacity_at_equal_memory(params, cfg, scfg, prompts, budgets)
     ttft = _ttft_mixed(params, cfg, scfg, full)
+    mesh = _bench_mesh(full)
     return {
         "config": {"mode": "full" if full else "smoke",
                    "capacity": scfg.capacity, "requests": len(prompts),
                    "model": cfg.name, "max_len": scfg.max_len},
         "continuous": cont, "static": stat, "differential": diff,
         "paged": paged, "paged_differential": paged_diff,
-        "capacity_at_equal_memory": cap, "ttft_mixed": ttft,
+        "capacity_at_equal_memory": cap, "ttft_mixed": ttft, "mesh": mesh,
         "speedup_tokens_per_s": round(cont["tokens_per_s"]
                                       / stat["tokens_per_s"], 2),
     }
@@ -314,7 +373,12 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny model + short stream (CI)")
     ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--_mesh-one", type=int, default=0, dest="mesh_one",
+                    help=argparse.SUPPRESS)   # internal subprocess entry
     args = ap.parse_args()
+    if args.mesh_one:
+        print(json.dumps(_mesh_one(not args.smoke, args.mesh_one)))
+        return
     res = bench(full=not args.smoke)
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1, sort_keys=True)
@@ -335,6 +399,13 @@ def main() -> None:
           f"ms vs contiguous "
           f"{res['ttft_mixed']['contiguous']['short_ttft_p99_ms']}ms "
           f"(no_worse={res['ttft_mixed']['paged_no_worse']})")
+    for key, m in sorted(res["mesh"].items()):
+        if "error" in m:
+            print(f"{key}: FAILED ({m['error'][:200]})")
+        else:
+            print(f"{key} ({m['tp_path']}): continuous "
+                  f"{m['continuous']['tokens_per_s']} tok/s, paged "
+                  f"{m['paged']['tokens_per_s']} tok/s")
     print(f"wrote {args.out}")
     for key in ("differential", "paged_differential"):
         if not res[key]["token_identical"]:

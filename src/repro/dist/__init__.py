@@ -11,18 +11,21 @@ meshes:
   compression and a compressed ``psum`` for bandwidth-bound reductions.
 * :mod:`repro.dist.pipeline` — GPipe-style pipeline parallelism over a mesh
   axis (``pipeline_apply``) plus bubble accounting.
+* :mod:`repro.dist.tp` — manual (shard_map) tensor parallelism for the
+  serving path: explicit per-layer allreduce seams that can run the
+  compressed collective, where GSPMD could only place exact psums.
 
 :mod:`repro.dist.compat` papers over jax API drift (``jax.shard_map`` vs
 ``jax.experimental.shard_map``) so callers never branch on version.
 """
 
-from repro.dist import collectives, partition, pipeline
+from repro.dist import collectives, partition, pipeline, tp
 from repro.dist.compat import shard_map
 from repro.dist.partition import (DEFAULT_RULES, mesh_rules, named_sharding,
                                   resolve_spec, shard, tree_shardings)
 
 __all__ = [
-    "collectives", "partition", "pipeline", "shard_map",
+    "collectives", "partition", "pipeline", "tp", "shard_map",
     "DEFAULT_RULES", "mesh_rules", "named_sharding", "resolve_spec",
     "shard", "tree_shardings",
 ]

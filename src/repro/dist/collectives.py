@@ -9,7 +9,21 @@ Scheme: flatten, pad to a multiple of ``block``, one float32 scale per block
 element is at most scale/2 = max|block|/254.  Zero blocks quantize to exact
 zeros.  ``compressed_psum`` is the shard_map-level reduction built on it:
 all-gather the int8 payload + scales, dequantize, and sum locally — the
-result is value-replicated like a psum.
+result is value-replicated like a psum, and (like ``jax.lax.psum``) comes
+back in the INPUT dtype: the f32 dequantize+accumulate is internal, so a
+bf16 activation stays bf16 on the wire-facing API (dtype-parity is a tested
+contract — a silent bf16 -> f32 widening would double every downstream
+buffer the collective feeds).
+
+Non-finite contract (also tested): quantization SANITIZES.  A NaN element
+quantizes to 0 and ±Inf clamps to the block's finite-magnitude extreme;
+scales are computed over finite elements only.  The failure mode this buys
+out of: one overflowed activation would otherwise turn the block's scale
+into NaN/Inf and poison all ``block`` elements (and, through a psum, every
+shard's copy).  Serving collectives prefer bounded local error over
+amplifying one bad element into a whole-block (then whole-mesh) corruption;
+callers that want NaN *propagation* for divergence detection should check
+finiteness before quantizing (the training nan-rollback path does).
 
 Traffic honesty: the all-gather formulation moves ~(N-1)·|x| int8 bytes per
 device on an N-way axis, vs ~8·|x| bytes for a ring fp32 all-reduce — it
@@ -32,14 +46,23 @@ def quantize_int8(x: jax.Array, block: int = 64):
 
     ``pad`` is the (static) number of zero elements appended so the flat size
     divides ``block``; callers thread it to :func:`dequantize_int8`.
+
+    Non-finite inputs are sanitized per element (see the module docstring):
+    scales see only finite magnitudes, NaN quantizes to 0, ±Inf clamps to
+    the block's finite extreme — one bad element can never corrupt its
+    block's other ``block - 1`` elements.
     """
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % block
     if pad:
         flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
     blocks = flat.reshape(-1, block).astype(jnp.float32)
-    amax = jnp.max(jnp.abs(blocks), axis=1)
+    finite = jnp.isfinite(blocks)
+    amax = jnp.max(jnp.where(finite, jnp.abs(blocks), 0.0), axis=1)
     scales = jnp.where(amax > 0, amax, 1.0) / QMAX
+    # NaN -> 0 first (clip propagates NaN), then ±Inf -> ±amax
+    blocks = jnp.where(jnp.isnan(blocks), 0.0, blocks)
+    blocks = jnp.clip(blocks, -amax[:, None], amax[:, None])
     q = jnp.clip(jnp.round(blocks / scales[:, None]), -QMAX, QMAX)
     return q.astype(jnp.int8), scales.astype(jnp.float32), pad
 
@@ -68,6 +91,8 @@ def compressed_psum(x: jax.Array, axis_name: str, block: int = 64) -> jax.Array:
     total = jnp.sum(qg.astype(jnp.float32) * sg[..., None], axis=0).reshape(-1)
     if pad:
         total = total[:-pad]
+    # dtype parity with jax.lax.psum: the f32 dequantize+accumulate is an
+    # internal detail — a bf16 input comes back bf16 (tested contract)
     return total.reshape(x.shape).astype(x.dtype)
 
 

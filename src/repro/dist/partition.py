@@ -53,6 +53,15 @@ DEFAULT_RULES: dict[str, Any] = {
     "embed_act": None,                 # activations' embed dim (residual)
 }
 
+#: serving rules: DEFAULT_RULES with the batch axis forced replicated — in
+#: the continuous engine the cache "batch" dim is the slot (or page-id) axis,
+#: spliced by per-request index at admission/eviction, and sharding it would
+#: turn every slot insert into cross-device traffic.  The head-like axes
+#: (kv_heads / heads / mlp / conv_ch ...) keep their "model" mapping, which
+#: is the natural mesh seam for both the per-slot segments and the paged
+#: flat store (the host-side page tables are shard-invariant page ids).
+SERVE_RULES: dict[str, Any] = {**DEFAULT_RULES, "batch": None}
+
 # --------------------------------------------------------------- active mesh
 # contextvar (not a module global): concurrent mesh_rules scopes in different
 # threads/tasks must not see each other's mesh

@@ -1,0 +1,156 @@
+"""Manual tensor parallelism for the serving path (Megatron-style).
+
+The training stack shards through GSPMD: ``shard`` constraints under
+``mesh_rules`` let the compiler place collectives.  The serving decode step
+wants the opposite trade — *explicit* collectives at the two per-layer seams
+(attention output projection, MLP down projection) so their payloads can be
+int8-compressed (``dist.collectives.compressed_psum``), which GSPMD cannot
+express.  This module is that explicit path:
+
+* :data:`TP_RULES` — the serving partition rules for a 1-D ``("model",)``
+  mesh: attention heads / kv heads and the MLP hidden dim shard; embeddings,
+  the vocab projection, experts and every SSM axis stay replicated, so the
+  only cross-device traffic per layer is the two post-contraction psums
+  (plus none at the logits: the lm_head is replicated, argmax is local).
+* :func:`tp_context` — a contextvar scope entered INSIDE a ``shard_map``
+  body while it traces; model code stays unconditional.
+* :func:`tp_allreduce` — the seam primitive: identity without an active
+  context (single-device and GSPMD paths pay nothing), ``jax.lax.psum`` or
+  ``compressed_psum`` inside one.
+* :func:`tp_eligible` — the gate: manual TP sums *partial* products, so a
+  head/mlp dim that silently fell back to replication (divisibility) would
+  be summed N times — every seam dimension must divide the mesh exactly or
+  the engine falls back to GSPMD.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, Iterator
+
+import jax
+
+from repro.dist.collectives import compressed_psum
+from repro.models.config import ModelConfig
+
+#: Serving tensor-parallel rules (1-D ``("model",)`` mesh).  Differences
+#: from ``partition.DEFAULT_RULES`` are deliberate: ``experts`` replicate
+#: (MoE routing/dispatch is replicated computation under manual TP — only
+#: the expert FFN hidden dim shards), ``vocab`` replicates (local argmax,
+#: no masked-gather embedding), and batch/SSM axes never shard.
+TP_RULES: dict[str, Any] = {
+    "batch": None,
+    "embed": None,
+    "vocab": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": None,
+    "ssm_heads": None,
+    "ssm_inner": None,
+    "conv_ch": None,
+    "act_seq": None,
+    "seq": None,
+    "kv_seq": None,
+    "head_dim": None,
+    "ssm_state": None,
+    "layers": None,
+    "embed_act": None,
+}
+
+#: model families the manual path covers (the attention families the
+#: continuous engine's paged mode already serves)
+TP_FAMILIES = ("dense", "moe", "vlm")
+
+_TP: contextvars.ContextVar[tuple[str, bool, int] | None] = \
+    contextvars.ContextVar("repro_dist_tp", default=None)
+
+
+@contextlib.contextmanager
+def tp_context(axis_name: str, *, compressed: bool = False,
+               block: int = 64) -> Iterator[None]:
+    """Activate the TP seams over mapped mesh axis ``axis_name``.
+
+    Enter this inside the ``shard_map`` body (it is active while the body
+    traces, which is when ``tp_allreduce`` call sites resolve).  With
+    ``compressed`` the seams reduce through ``compressed_psum`` — int8
+    payloads, bounded per-block error, only a win on small axes (see
+    ``dist.collectives``); callers wanting bit-exact parity leave it off.
+    """
+    token = _TP.set((axis_name, compressed, block))
+    try:
+        yield
+    finally:
+        _TP.reset(token)
+
+
+def tp_axis() -> str | None:
+    """Mapped axis name of the active TP scope, or None."""
+    ctx = _TP.get()
+    return ctx[0] if ctx else None
+
+
+def tp_allreduce(x: jax.Array) -> jax.Array:
+    """Sum ``x``'s partial products over the TP axis (identity when no TP
+    scope is active).  This is the one primitive model code calls — placed
+    immediately after every contraction over a sharded dimension."""
+    ctx = _TP.get()
+    if ctx is None:
+        return x
+    axis, compressed, block = ctx
+    if compressed:
+        return compressed_psum(x, axis, block=block)
+    return jax.lax.psum(x, axis)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def tp_specs(axes_tree):
+    """Logical-axes tree -> PartitionSpec tree under :data:`TP_RULES`.
+
+    No divisibility fallback on purpose — :func:`tp_eligible` already
+    guarantees every seam dimension divides the mesh, and a silent
+    replication here would corrupt the partial sums (see module docstring).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    return jax.tree.map(lambda la: P(*[TP_RULES.get(a) for a in la]),
+                        axes_tree, is_leaf=_is_axes_leaf)
+
+
+def tp_shardings(axes_tree, mesh):
+    """Logical-axes tree -> NamedSharding tree under :data:`TP_RULES`."""
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        tp_specs(axes_tree))
+
+
+def tp_eligible(cfg: ModelConfig, n_shards: int) -> tuple[bool, str]:
+    """Can ``cfg`` run the manual shard_map TP path over ``n_shards``?
+
+    Returns ``(ok, reason)``; the reason names the first disqualifier so
+    engine logs say *why* a mesh fell back to GSPMD.  The divisibility
+    checks are load-bearing, not a preference: a seam dimension that does
+    not divide the mesh would be silently replicated by the partition
+    fallback, and ``tp_allreduce`` would then multiply its contribution by
+    the mesh size.
+    """
+    if n_shards <= 1:
+        return False, "mesh has no model-parallel extent"
+    if cfg.family not in TP_FAMILIES:
+        return False, (f"family {cfg.family!r} not in {TP_FAMILIES} "
+                       f"(dense per-slot SSM/cross state)")
+    if cfg.padded_heads:
+        return False, ("padded_heads uses a q->kv head map built from "
+                       "global head counts")
+    for name, dim in (("n_heads", cfg.n_heads), ("n_kv_heads",
+                                                 cfg.n_kv_heads),
+                      ("d_ff", cfg.d_ff)):
+        if dim % n_shards:
+            return False, f"{name}={dim} not divisible by {n_shards} shards"
+    return True, "ok"

@@ -33,6 +33,14 @@ margin, and commits winners into the live cache — the engine hot-swaps them
 on its next step, no restart.  Decisions journal to ``--autotune-log``
 (summarize with ``repro.launch.obsreport --kind autotune``).
 
+``--mesh N`` serves tensor-parallel over the first N devices on a 1-D
+``("model",)`` mesh: parameters and KV/SSM cache shard on the head/mlp
+axes, the slot (or page-id) axis stays replicated, and greedy outputs are
+token-identical to the 1-device engine (see
+tests/test_sharding_multidevice.py).  ``--tp-mode`` picks the manual
+shard_map path vs GSPMD propagation; ``--compressed-collectives`` int8-
+compresses the decode psum seams (approximate).
+
 ``--paged`` serves from the paged KV cache (``repro.serve.pages``): add
 ``--page-size``/``--num-pages`` to set the pool, ``--prefill-chunk N`` to
 interleave long-prompt prefill with decode, ``--no-prefix-cache`` /
@@ -201,6 +209,21 @@ def main() -> None:
                     default="queue",
                     help="paged admission policy when pages/slots are "
                          "unavailable at submit time")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="serve tensor-parallel over the first N devices "
+                         "(1-D 'model' mesh; shards heads/kv-heads/mlp, "
+                         "replicates the slot/page axis).  Multi-device on "
+                         "CPU needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--tp-mode", choices=("auto", "shard_map", "gspmd"),
+                    default="auto",
+                    help="tensor-parallel path with --mesh: manual shard_map "
+                         "collectives vs GSPMD constraint propagation "
+                         "(auto = shard_map when the config is TP-eligible)")
+    ap.add_argument("--compressed-collectives", action="store_true",
+                    help="int8-compress the decode-step psum seams (with "
+                         "--mesh; shard_map path only).  Approximate: "
+                         "trades exact token parity for collective bytes")
     ap.add_argument("--use-pallas", action="store_true",
                     help="route fwd-only paths through SIP-tuned kernels")
     ap.add_argument("--sip-cache", default=None,
@@ -223,6 +246,15 @@ def main() -> None:
                  "into)")
     if args.autotune and args.static:
         ap.error("--autotune requires the continuous engine (drop --static)")
+    if args.static and args.mesh:
+        ap.error("--mesh requires the continuous engine (drop --static)")
+    if args.compressed_collectives and not args.mesh:
+        ap.error("--compressed-collectives requires --mesh")
+
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import mesh_for
+        mesh = mesh_for((args.mesh,), ("model",))
 
     cfg = configs.get_smoke(args.arch) if args.smoke else configs.get(args.arch)
     if args.use_pallas:
@@ -241,7 +273,8 @@ def main() -> None:
                        num_pages=args.num_pages or None,
                        prefill_chunk=args.prefill_chunk or None,
                        prefix_cache=not args.no_prefix_cache,
-                       admission=args.admission)
+                       admission=args.admission, tp_mode=args.tp_mode,
+                       compressed_collectives=args.compressed_collectives)
     prompts = [rng.integers(0, cfg.vocab, t.prompt_len).astype(np.int32)
                for t in traffic]
     extras = None
@@ -297,7 +330,11 @@ def main() -> None:
         else:
             ceng = ContinuousEngine(params, cfg, scfg,
                                     example_extra=extras[0] if extras
-                                    else None, obs=reg, recorder=recorder)
+                                    else None, obs=reg, recorder=recorder,
+                                    mesh=mesh)
+            if mesh is not None:
+                print(f"[serve] mesh={tuple(mesh.shape.values())} "
+                      f"tp_path={ceng.tp_path} ({ceng.tp_reason})")
             if service is not None:
                 service.start()
             try:

@@ -157,27 +157,11 @@ def batch_shardings(batch_tree, mesh):
 
 
 def cache_axes(cfg: ModelConfig):
-    """Logical axes for each cache leaf (same tree structure as cache_sds)."""
-    kv = {"k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
-          "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
-          "len": ("layers",)}
-    ssm = {"conv": (None, "batch", None, "conv_ch"),
-           "ssd": (None, "batch", "ssm_heads", "ssm_state", None)}
-    ssm_g = {"conv": (None, None, "batch", None, "conv_ch"),
-             "ssd": (None, None, "batch", "ssm_heads", "ssm_state", None)}
-    if cfg.family in ("dense", "moe", "vlm"):
-        return kv
-    if cfg.family == "ssm":
-        return ssm
-    if cfg.family == "hybrid":
-        out = {"mamba": ssm_g, "attn": kv}
-        if cfg.n_layers % cfg.hybrid_group:
-            out["trailing"] = ssm
-        return out
-    if cfg.family == "enc_dec":
-        x = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
-        return {"self": kv, "cross": (x, x)}
-    raise ValueError(cfg.family)
+    """Logical axes for each cache leaf (same tree structure as cache_sds).
+    The table itself lives with the cache layouts in ``models.model``
+    (``cache_logical_axes``) so sharded serving shares one source of
+    truth; this alias keeps the historical launch-side entry point."""
+    return M.cache_logical_axes(cfg)
 
 
 def cache_shardings(cfg: ModelConfig, mesh, batch: int, max_len: int):

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.partition import shard
+from repro.dist.tp import tp_allreduce
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
 from repro.kernels.paged_attention import ops as pg_ops
@@ -223,7 +224,10 @@ def attention(p, x: jnp.ndarray, cfg: ModelConfig, *,
         if return_cache:
             new_cache = {"k": k, "v": v, "len": jnp.int32(s)}
     o = shard(o, "batch", "seq", "heads", "head_dim")
-    out = jnp.einsum("bshk,hkd->bsd", o, _wo_eff(p, cfg, x.dtype))
+    # manual-TP seam: heads are the sharded contraction dim, so the wo
+    # product is a partial sum per shard — reduced here (identity outside a
+    # tp_context, so single-device and GSPMD paths are untouched)
+    out = tp_allreduce(jnp.einsum("bshk,hkd->bsd", o, _wo_eff(p, cfg, x.dtype)))
     out = shard(out, "batch", "seq", "embed_act")
     if return_cache or cache is not None:
         return out, new_cache
@@ -304,7 +308,7 @@ def cross_attention(p, x: jnp.ndarray, ctx_kv: tuple[jnp.ndarray, jnp.ndarray],
         q = nn.rmsnorm_apply(p["q_norm"], q)
     k, v = ctx_kv
     o = _sdpa(q, k, v, causal=False, window=None, kv_idx=kv_head_map(cfg))
-    return jnp.einsum("bshk,hkd->bsd", o, _wo_eff(p, cfg, dt))
+    return tp_allreduce(jnp.einsum("bshk,hkd->bsd", o, _wo_eff(p, cfg, dt)))
 
 
 def encode_kv(p, ctx: jnp.ndarray, cfg: ModelConfig):

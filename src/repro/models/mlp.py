@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.partition import shard
+from repro.dist.tp import tp_allreduce
 from repro.models import modules as nn
 from repro.models.config import ModelConfig
 
@@ -33,4 +34,6 @@ def mlp(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
     else:
         h = jax.nn.gelu(x @ p["w_up"].astype(dt), approximate=True)
     h = shard(h, "batch", "seq", "mlp")
-    return h @ p["w_down"].astype(dt)
+    # manual-TP seam: the hidden (mlp) dim shards, so the down projection
+    # is a partial sum per shard (identity outside a tp_context)
+    return tp_allreduce(h @ p["w_down"].astype(dt))

@@ -78,6 +78,14 @@ def init_lm_shapes(key, cfg: ModelConfig):
     return jax.eval_shape(functools.partial(init_lm, cfg=cfg), key)
 
 
+def param_logical_axes(cfg: ModelConfig):
+    """Logical partition axes for every param leaf, recovered without
+    allocating (``nn.Param`` carries its axes through ``eval_shape``).  Lets
+    sharded serving derive param shardings from a plain (unwrapped) param
+    tree — the tree structure matches ``nn.unwrap(init_lm(...))``."""
+    return nn.axes_of(init_lm_shapes(jax.random.PRNGKey(0), cfg))
+
+
 # =============================================================== scan utils
 def _maybe_remat(fn, cfg: ModelConfig):
     if not cfg.remat or cfg.remat_policy == "none":
@@ -438,6 +446,60 @@ def _hybrid_decode(p, x, caches, cfg: ModelConfig):
         x, tstates = _scan(tbody, x, (p["trailing"], caches["trailing"]), cfg)
         new["trailing"] = tstates
     return x, new
+
+
+# ====================================================== cache logical axes
+def cache_logical_axes(cfg: ModelConfig):
+    """Logical partition axes for each decode-cache leaf (the same tree
+    structure ``prefill`` returns, for every family).  This is the canonical
+    table both training (``launch.steps.cache_shardings``) and sharded
+    serving consume — under a 1-D ``("model",)`` serving mesh only the
+    head-like axes (kv_heads / ssm_heads / conv_ch) resolve to a mesh axis,
+    which is exactly the seam paged and per-slot stores shard on."""
+    kv = {"k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+          "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+          "len": ("layers",)}
+    ssm = {"conv": (None, "batch", None, "conv_ch"),
+           "ssd": (None, "batch", "ssm_heads", "ssm_state", None)}
+    ssm_g = {"conv": (None, None, "batch", None, "conv_ch"),
+             "ssd": (None, None, "batch", "ssm_heads", "ssm_state", None)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        return kv
+    if cfg.family == "ssm":
+        return ssm
+    if cfg.family == "hybrid":
+        out = {"mamba": ssm_g, "attn": kv}
+        if cfg.n_layers % cfg.hybrid_group:
+            out["trailing"] = ssm
+        return out
+    if cfg.family == "enc_dec":
+        x = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        return {"self": kv, "cross": (x, x)}
+    raise ValueError(cfg.family)
+
+
+def _is_logical_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str)
+                                        for a in x)
+
+
+def serve_cache_axes(cfg: ModelConfig, slot_axes):
+    """Adapt :func:`cache_logical_axes` to the serving cache layouts.
+
+    ``slot_axes`` is the per-leaf marker tree ``alloc_slot_caches`` /
+    ``alloc_paged_caches`` return: leaves marked :data:`SLOT_AXIS_SHARED`
+    gained a TRAILING slot axis (per-layer ``len`` scalars became
+    ``(L, capacity)``), so their logical tuple gains a trailing ``None``;
+    paged stores keep the canonical 5-axis tuple (the page-id dim sits where
+    ``batch`` was and resolves to the same mesh axes — replicated on a
+    model-only serving mesh).  The result feeds ``dist.partition``
+    (``tree_shardings`` / ``resolve_spec``) directly.
+    """
+    logical = cache_logical_axes(cfg)
+    return jax.tree.map(
+        lambda la, ax: tuple(la) + (None,) if ax == SLOT_AXIS_SHARED
+        else tuple(la),
+        logical, slot_axes, is_leaf=_is_logical_leaf)
 
 
 # ============================================== per-slot caches (cont. batching)

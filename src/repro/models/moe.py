@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.partition import shard
+from repro.dist.tp import tp_allreduce
 from repro.models import modules as nn
 from repro.models.config import ModelConfig
 
@@ -98,7 +99,11 @@ def _dispatch_ffn(p, xt: jnp.ndarray, gate_vals, expert_idx,
     else:
         h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt)),
                         approximate=True)
-    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+    # manual-TP seam: under serving TP the experts replicate and the FFN
+    # hidden dim f shards, so the down projection is a partial sum per
+    # shard (identity outside a tp_context; GSPMD EP is unaffected)
+    out_buf = tp_allreduce(jnp.einsum("ecf,efd->ecd", h,
+                                      p["w_down"].astype(dt)))
 
     gathered = out_buf.reshape(e * cap, d)[jnp.minimum(dest, e * cap - 1)]
     gathered = jnp.where(keep[:, None], gathered, 0.0)

@@ -29,6 +29,19 @@ serving directly):
   outputs stay token-identical to the static reference engine —
   tests/test_serve_paged.py holds every paged mode to that.
 
+  With a ``mesh`` the continuous engine serves tensor-parallel: params and
+  every cache leaf (per-slot segments or the paged flat store, whose
+  head axis is the natural mesh seam — the host-side page tables are
+  shard-invariant page ids) carry NamedShardings, and prefill / chunked
+  prefill / lockstep decode dispatch sharded.  TP-eligible attention configs
+  (``dist.tp.tp_eligible``) run the manual shard_map path — the forward in
+  one ``shard_map`` body with exactly two explicit psums per layer,
+  optionally int8-compressed (``ServeConfig.compressed_collectives``) —
+  and everything else falls back to GSPMD under ``partition.SERVE_RULES``.
+  Greedy sharded output is token-identical to the 1-device engine
+  (tests/test_sharding_multidevice.py::serve_sharded holds both cache
+  layouts to that at two mesh shapes).
+
 Kernel resolution happens at trace time, so wrap serving in
 ``repro.core.registry.schedule_cache(path)`` to serve SIP-tuned schedules on
 the hot path (see launch/serve.py).  Registry handles are late-binding: a
@@ -47,8 +60,11 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core.registry import active_schedule_cache
+from repro.dist import partition, tp
+from repro.dist.compat import shard_map
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.obs import metrics as obs_metrics
@@ -85,6 +101,15 @@ class ServeConfig:
     admission: str = "queue"        # "queue": wait for pages/slots;
                                     # "reject": submit raises PagesExhausted
                                     # unless the request can start NOW
+    # ---- tensor-parallel serving (ContinuousEngine(mesh=...)) ------------
+    tp_mode: str = "auto"           # "auto": manual shard_map TP when the
+                                    # config is eligible (dist.tp.tp_eligible)
+                                    # else GSPMD; "shard_map"/"gspmd" force a
+                                    # path (shard_map raises if ineligible)
+    compressed_collectives: bool = False  # int8-compress the two per-layer
+                                    # decode-seam psums (shard_map path only;
+                                    # bounded error, NOT token-exact)
+    compress_block: int = 64        # quantization block for compressed seams
 
 
 class Engine:
@@ -201,6 +226,12 @@ class _ChunkTask:
     pos: int
 
 
+def _rep(tree):
+    """Full-rank replicated PartitionSpecs for a pytree (shard_map in_specs
+    for host-owned operands: tokens, page tables, masks, scalars)."""
+    return jax.tree.map(lambda x: P(*([None] * jnp.ndim(x))), tree)
+
+
 def _shape_key(req: Request) -> tuple:
     """Prefill-coalescing key: requests with equal keys compile and batch
     together."""
@@ -240,12 +271,25 @@ class ContinuousEngine:
                  example_extra: dict[str, np.ndarray] | None = None,
                  on_token: Callable[[Request, int], None] | None = None,
                  obs: obs_metrics.MetricsRegistry | None = None,
-                 recorder: WorkloadRecorder | None = None):
+                 recorder: WorkloadRecorder | None = None,
+                 mesh=None):
         cfg.validate()
         self.params = params
         self.cfg = cfg
         self.scfg = scfg = ServeConfig() if scfg is None else scfg
         self.capacity = scfg.capacity
+        # tensor-parallel serving: with a mesh, params and every cache leaf
+        # carry NamedShardings and the model dispatches run sharded — the
+        # manual shard_map path when the config is TP-eligible (explicit
+        # per-layer psums, optionally int8-compressed), GSPMD otherwise
+        self.mesh = mesh
+        self.tp_path: str | None = None
+        self.tp_reason = ""
+        if mesh is not None:
+            self.tp_path, self.tp_reason = self._resolve_tp_path()
+        elif scfg.compressed_collectives:
+            raise ValueError("compressed_collectives requires a serving mesh "
+                             "(the seams only exist on the shard_map path)")
         self.on_token = on_token
         self.obs = obs if obs is not None else obs_metrics.MetricsRegistry()
         self.recorder = recorder
@@ -296,6 +340,8 @@ class ContinuousEngine:
         else:
             self.caches, self._axes = M.alloc_slot_caches(
                 params, cfg, scfg.capacity, scfg.max_len, example_inputs)
+        if mesh is not None:
+            self._shard_state()
         self._make_dispatchers()
         # schedule hot-swap: kernel handles are late-binding, but jax.jit
         # memoizes traces by shape — a ScheduleCache version bump alone never
@@ -322,12 +368,121 @@ class ContinuousEngine:
         self._h_decode = self.obs.histogram("serve.decode_step_s")
         self._last_emit: dict[int, float] = {}   # uid -> last token time
 
+    # ------------------------------------------------------- sharded serving
+    def _resolve_tp_path(self) -> tuple[str, str]:
+        """Pick the sharded execution path for ``self.mesh`` per
+        ``scfg.tp_mode`` (see :mod:`repro.dist.tp` for the eligibility
+        rationale).  Returns ``(path, reason)``."""
+        scfg, mesh = self.scfg, self.mesh
+        if "model" not in mesh.axis_names:
+            raise ValueError(f"serving mesh needs a 'model' axis, got "
+                             f"{mesh.axis_names}")
+        ok, reason = tp.tp_eligible(self.cfg, mesh.shape["model"])
+        if scfg.tp_mode == "shard_map":
+            if not ok:
+                raise ValueError(f"tp_mode='shard_map' but {reason}")
+            path = "shard_map"
+        elif scfg.tp_mode == "gspmd":
+            path = "gspmd"
+        elif scfg.tp_mode == "auto":
+            path = "shard_map" if ok else "gspmd"
+        else:
+            raise ValueError(f"tp_mode must be 'auto'/'shard_map'/'gspmd', "
+                             f"got {scfg.tp_mode!r}")
+        if scfg.compressed_collectives and path != "shard_map":
+            raise ValueError(f"compressed_collectives needs the shard_map TP "
+                             f"path ({reason})")
+        return path, reason
+
+    def _shard_state(self) -> None:
+        """Move params and the freshly allocated slot/page caches onto the
+        serving mesh.  Admission never materializes an unsharded cache after
+        this: every dispatcher pins its cache outputs back to these
+        shardings, and splicing (insert/evict/set_len) runs on the sharded
+        buffers in place."""
+        mesh, cfg = self.mesh, self.cfg
+        paxes = M.param_logical_axes(cfg)
+        caxes = M.serve_cache_axes(cfg, self._axes)
+        self._grp_axes = M.cache_logical_axes(cfg)
+        if self.tp_path == "shard_map":
+            self._pspecs = tp.tp_specs(paxes)
+            self._cspecs = tp.tp_specs(caxes)
+            self._grp_specs = tp.tp_specs(self._grp_axes)
+            pshard = tp.tp_shardings(paxes, mesh)
+            cshard = tp.tp_shardings(caxes, mesh)
+        else:
+            rules = partition.SERVE_RULES
+            pshard = partition.tree_shardings(paxes, mesh,
+                                              sds_tree=self.params,
+                                              rules=rules)
+            cshard = partition.tree_shardings(caxes, mesh,
+                                              sds_tree=self.caches,
+                                              rules=rules)
+        self.params = jax.device_put(self.params, pshard)
+        self.caches = jax.device_put(self.caches, cshard)
+        self._cache_shardings = cshard
+
+    def _seams(self):
+        """The manual-TP scope every shard_map body runs under."""
+        return tp.tp_context("model",
+                             compressed=self.scfg.compressed_collectives,
+                             block=self.scfg.compress_block)
+
+    def _pin_slot_caches(self, caches):
+        """Constrain a slot/page cache tree back to the engine's shardings
+        (inside a traced fn) so splice outputs keep the mesh layout and
+        decode's donation reuses the same sharded buffers."""
+        return jax.tree.map(jax.lax.with_sharding_constraint, caches,
+                            self._cache_shardings)
+
+    def _pin_group_caches(self, caches):
+        """Same, for a group-sized prefill cache (GSPMD path; trace-time
+        shapes drive the divisibility fallback per leaf)."""
+        return jax.tree.map(
+            lambda ax, x: jax.lax.with_sharding_constraint(
+                x, partition.named_sharding(ax, self.mesh, shape=x.shape,
+                                            rules=partition.SERVE_RULES)),
+            self._grp_axes, caches, is_leaf=partition._is_axes_leaf)
+
+    def _build_prefill(self, max_len: int):
+        """One prefill dispatcher at ``max_len`` for the active path —
+        single-device, GSPMD (traced under mesh_rules so the model's shard
+        constraints activate), or manual shard_map TP (the whole forward in
+        one shard_map body, seams reduced via tp_allreduce)."""
+        cfg, mesh = self.cfg, self.mesh
+        if mesh is None:
+            return jax.jit(functools.partial(M.prefill, cfg=cfg,
+                                             max_len=max_len))
+        if self.tp_path == "shard_map":
+            def tp_prefill(params, inputs):
+                def body(p, i):
+                    with self._seams():
+                        return M.prefill(p, i, cfg, max_len=max_len)
+                return shard_map(
+                    body, mesh=mesh, in_specs=(self._pspecs, _rep(inputs)),
+                    out_specs=(P(), self._grp_specs),
+                    check_vma=False)(params, inputs)
+            return jax.jit(tp_prefill)
+
+        def gs_prefill(params, inputs):
+            with partition.mesh_rules(mesh, partition.SERVE_RULES):
+                logits, caches = M.prefill(params, inputs, cfg,
+                                           max_len=max_len)
+                return logits, self._pin_group_caches(caches)
+        return jax.jit(gs_prefill)
+
     def _make_dispatchers(self) -> None:
         """(Re)create the jitted step functions.  Called at construction and
         again on schedule hot-swap: fresh jax.jit wrappers mean fresh trace
         caches, so every kernel re-resolves against the current
         ScheduleCache contents on its next dispatch."""
         cfg, scfg = self.cfg, self.scfg
+        if self.mesh is not None and self.tp_path == "shard_map":
+            self._make_tp_dispatchers()
+            return
+        if self.mesh is not None:
+            self._make_gspmd_dispatchers()
+            return
         if self.paged:
             # paged prefill compiles once per page-rounded prompt length (or
             # per chunk shape) — these jits are keyed by that rounded length
@@ -360,13 +515,140 @@ class ContinuousEngine:
                                                           self._axes),
                 donate_argnums=(0,))
 
+    def _make_gspmd_dispatchers(self) -> None:
+        """Sharded dispatchers, GSPMD path: the existing step functions
+        traced under ``mesh_rules(SERVE_RULES)`` (activating the model's
+        ``shard`` constraints) with cache outputs pinned to the engine's
+        shardings — the compiler places the collectives."""
+        cfg, scfg, mesh = self.cfg, self.scfg, self.mesh
+        rules = partition.SERVE_RULES
+        if self.paged:
+            self._prefill_by_len = {}
+
+            def gs_decode(params, caches, token, pt, active, *, key):
+                with partition.mesh_rules(mesh, rules):
+                    tok, caches = _decode_sample_paged(
+                        params, caches, token, pt, active, cfg=cfg,
+                        temperature=scfg.temperature, key=key)
+                    return tok, self._pin_slot_caches(caches)
+            self._decode = jax.jit(gs_decode, donate_argnums=(1,))
+            self._insert_pages = jax.jit(
+                lambda caches, grp, slots, pages: self._pin_slot_caches(
+                    M.insert_pages(caches, grp, slots, pages, self._axes)),
+                donate_argnums=(0,))
+            self._set_len = jax.jit(
+                lambda caches, slot, value: self._pin_slot_caches(
+                    M.set_slot_lens(caches, slot, value, self._axes)),
+                donate_argnums=(0,))
+
+            def gs_chunk(params, caches, tokens, pt_row, slot, n_valid,
+                         embeds=None):
+                with partition.mesh_rules(mesh, rules):
+                    last, caches = M.prefill_chunk(
+                        params, caches, tokens, pt_row, slot, n_valid,
+                        cfg=cfg, axes=self._axes, embeds=embeds)
+                    return last, self._pin_slot_caches(caches)
+            self._chunk = jax.jit(gs_chunk, donate_argnums=(1,))
+        else:
+            self._prefill = self._build_prefill(scfg.max_len)
+
+            def gs_decode(params, caches, token, *, key):
+                with partition.mesh_rules(mesh, rules):
+                    tok, caches = _decode_sample(
+                        params, caches, token, cfg=cfg,
+                        temperature=scfg.temperature, key=key)
+                    return tok, self._pin_slot_caches(caches)
+            self._decode = jax.jit(gs_decode, donate_argnums=(1,))
+            self._insert = jax.jit(
+                lambda caches, grp, slots: self._pin_slot_caches(
+                    M.insert_slots(caches, grp, slots, self._axes)),
+                donate_argnums=(0,))
+
+    def _make_tp_dispatchers(self) -> None:
+        """Sharded dispatchers, manual shard_map TP path: each model forward
+        runs as one shard_map body under ``tp_context`` — heads/kv-heads and
+        the MLP hidden dim are mesh-local, and the only collectives are the
+        two explicit per-layer ``tp_allreduce`` seams (exact psum, or
+        ``compressed_psum`` when ``scfg.compressed_collectives``).  Sampling
+        stays outside the shard_map on the replicated logits.  Cache
+        splicing has no seam dimension contraction, so it stays a plain
+        GSPMD jit pinned to the slot-cache shardings."""
+        cfg, scfg, mesh = self.cfg, self.scfg, self.mesh
+        pspecs, cspecs = self._pspecs, self._cspecs
+        if self.paged:
+            self._prefill_by_len = {}
+
+            def tp_decode(params, caches, token, pt, active, *, key):
+                def body(p, c, t, ptt, act):
+                    with self._seams():
+                        return M.decode_step(p, c, t, cfg, pt=ptt, active=act)
+                logits, caches = shard_map(
+                    body, mesh=mesh,
+                    in_specs=(pspecs, cspecs, _rep(token), _rep(pt),
+                              _rep(active)),
+                    out_specs=(P(), cspecs), check_vma=False)(
+                        params, caches, token, pt, active)
+                return _pick(logits, scfg.temperature, key), caches
+            self._decode = jax.jit(tp_decode, donate_argnums=(1,))
+            self._insert_pages = jax.jit(
+                lambda caches, grp, slots, pages: self._pin_slot_caches(
+                    M.insert_pages(caches, grp, slots, pages, self._axes)),
+                donate_argnums=(0,))
+            self._set_len = jax.jit(
+                lambda caches, slot, value: self._pin_slot_caches(
+                    M.set_slot_lens(caches, slot, value, self._axes)),
+                donate_argnums=(0,))
+
+            def tp_chunk(params, caches, tokens, pt_row, slot, n_valid,
+                         embeds=None):
+                args = (params, caches, tokens, pt_row, slot, n_valid)
+                specs = (pspecs, cspecs, _rep(tokens), _rep(pt_row), P(), P())
+                if embeds is not None:
+                    args += (embeds,)
+                    specs += (_rep(embeds),)
+
+                def body(p, c, t, ptr, s, nv, *e):
+                    with self._seams():
+                        return M.prefill_chunk(
+                            p, c, t, ptr, s, nv, cfg=cfg, axes=self._axes,
+                            embeds=e[0] if e else None)
+                return shard_map(body, mesh=mesh, in_specs=specs,
+                                 out_specs=(P(), cspecs),
+                                 check_vma=False)(*args)
+            self._chunk = jax.jit(tp_chunk, donate_argnums=(1,))
+        else:
+            self._prefill = self._build_prefill(scfg.max_len)
+
+            def tp_decode(params, caches, token, *, key):
+                def body(p, c, t):
+                    with self._seams():
+                        return M.decode_step(p, c, t, cfg)
+                logits, caches = shard_map(
+                    body, mesh=mesh, in_specs=(pspecs, cspecs, _rep(token)),
+                    out_specs=(P(), cspecs), check_vma=False)(
+                        params, caches, token)
+                return _pick(logits, scfg.temperature, key), caches
+            self._decode = jax.jit(tp_decode, donate_argnums=(1,))
+            self._insert = jax.jit(
+                lambda caches, grp, slots: self._pin_slot_caches(
+                    M.insert_slots(caches, grp, slots, self._axes)),
+                donate_argnums=(0,))
+
     def _maybe_refresh_schedules(self) -> None:
         """Pick up ScheduleCache changes without a restart: when the store
         the engine was constructed under has a newer version (an autotune
         promotion, or a tuning session sharing the store), drop every traced
         dispatch and rebuild, so subsequent prefills/decodes trace against
         the new schedules.  KV caches, page tables, slots and in-flight
-        requests are untouched — only the compiled functions turn over."""
+        requests are untouched — only the compiled functions turn over.
+
+        Polled before EVERY dispatch (admission prefill, chunked prefill,
+        decode), not just at the top of :meth:`step`: commits can land
+        mid-step — an autotune thread promoting between the admission
+        prefill and the decode dispatch, or an ``on_token`` callback
+        committing during emission — and a top-of-step-only poll would serve
+        the rest of that step (and any dispatch the step path skips) on
+        stale schedules."""
         cache = self._sched_cache
         if cache is None or not cache.changed_since(self._sched_version):
             return
@@ -474,6 +756,7 @@ class ContinuousEngine:
             for group in groups.values():
                 self._admit_group(group, finished)
             if self.pool.occupancy:
+                self._maybe_refresh_schedules()
                 occ = self.pool.occupancy
                 t0 = time.perf_counter()
                 with obs_trace.span("serve.decode", occupancy=occ):
@@ -516,6 +799,7 @@ class ContinuousEngine:
     # ------------------------------------------------------------ internals
     def _admit_group(self, group: list[tuple[int, Request]],
                      finished: list[Request]) -> None:
+        self._maybe_refresh_schedules()
         t0 = time.perf_counter()
         slots = np.asarray([s for s, _ in group], np.int32)
         prompts = np.stack([r.prompt for _, r in group])
@@ -662,8 +946,7 @@ class ContinuousEngine:
     def _prefill_fn(self, r: int):
         fn = self._prefill_by_len.get(r)
         if fn is None:
-            fn = jax.jit(functools.partial(M.prefill, cfg=self.cfg,
-                                           max_len=r))
+            fn = self._build_prefill(r)
             self._prefill_by_len[r] = fn
         return fn
 
@@ -674,6 +957,7 @@ class ContinuousEngine:
         (short) chunk runs zero-padded at the fixed chunk shape with a
         traced valid-length, so compiles scale with chunk SHAPES, not
         prompt lengths."""
+        self._maybe_refresh_schedules()
         task = self._chunk_tasks[0]
         req, slot = task.req, task.slot
         remaining = len(req.prompt) - task.pos
@@ -746,6 +1030,7 @@ class ContinuousEngine:
                     if s not in self._prefilling]
         if not decoding:
             return
+        self._maybe_refresh_schedules()
         occ = len(decoding)
         active = np.zeros(self.capacity, bool)
         active[decoding] = True

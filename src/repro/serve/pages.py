@@ -28,6 +28,15 @@ needing a per-row dispatch guard.
 requests sharing a system-prompt prefix prefill once and alias the pages
 read-only.  The cache holds one reference per registered page; LRU eviction
 (:meth:`PrefixCache.evict`) returns pages to the pool under memory pressure.
+
+**Mesh seam.**  Under tensor-parallel serving (``ContinuousEngine(...,
+mesh=...)``) the flat page store shards on its *kv-head* axis and stays
+whole along the page-id axis (``partition.SERVE_RULES`` maps "batch" —
+the page-id dim here — to ``None``).  Everything in this module is
+therefore shard-invariant: page ids, refcounts, page tables and prefix
+hashes are host-side integers naming the same page on every device, so
+alloc/retain/release and prefix hits need no collective and no
+per-device variant.
 """
 
 from __future__ import annotations

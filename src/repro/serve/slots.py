@@ -7,6 +7,12 @@ property-testable in isolation (tests/test_slot_allocator.py):
   especially) under full occupancy;
 * liveness — as long as slots keep being released, every submitted item is
   eventually admitted.
+
+Under tensor-parallel serving the engine's cache shards on head-like axes
+but never on the slot axis (``partition.SERVE_RULES`` forces "batch" to
+replicate), so a slot index names the same batch row on every device and
+this allocator runs unchanged on the host — admission/eviction decisions
+are made once and apply to every shard.
 """
 
 from __future__ import annotations

@@ -86,6 +86,134 @@ def compressed_psum_test():
     print(json.dumps({"rel_err": rel, "exact_is_exact": exact_err}))
 
 
+def tp_parity():
+    """Manual shard_map TP (dist.tp): prefill + greedy decode over the
+    model fns must produce the single-device tokens at every eligible mesh
+    width, and the compressed seams must stay within int8 tolerance."""
+    import functools
+
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import tp
+    from repro.dist.compat import shard_map
+    from repro.launch import mesh as mesh_lib
+    from repro.models import model as M
+    from repro.models import modules as nn
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=8, n_kv_heads=4, d_ff=256, vocab=128,
+                      dtype="float32")
+    params = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(0)
+    inputs = {"tokens": jnp.asarray(rng.integers(0, 128, (2, 16)), jnp.int32)}
+    max_len = 24
+
+    def greedy(prefill_fn, decode_fn, p):
+        logits, caches = prefill_fn(p, inputs)
+        toks = [np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))]
+        for _ in range(4):
+            logits, caches = decode_fn(p, caches, jnp.asarray(toks[-1]))
+            toks.append(np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)))
+        return np.stack(toks, 1), np.asarray(logits)
+
+    ref_toks, ref_logits = greedy(
+        jax.jit(functools.partial(M.prefill, cfg=cfg, max_len=max_len)),
+        jax.jit(functools.partial(M.decode_step, cfg=cfg)), params)
+
+    paxes = M.param_logical_axes(cfg)
+    pspecs = tp.tp_specs(paxes)
+    cspecs = tp.tp_specs(M.cache_logical_axes(cfg))
+    out = {}
+    for n in (2, 4):
+        ok, why = tp.tp_eligible(cfg, n)
+        assert ok, why
+        mesh = mesh_lib.mesh_for((n,), ("model",))
+        params_s = jax.device_put(params, tp.tp_shardings(paxes, mesh))
+
+        def rep(tree):
+            return jax.tree.map(lambda x: P(*[None] * jnp.ndim(x)), tree)
+
+        def sm_prefill(p, i, *, compressed=False):
+            def body(pp, ii):
+                with tp.tp_context("model", compressed=compressed):
+                    return M.prefill(pp, ii, cfg, max_len=max_len)
+            return shard_map(body, mesh=mesh, in_specs=(pspecs, rep(i)),
+                             out_specs=(P(), cspecs),
+                             check_vma=False)(p, i)
+
+        def sm_decode(p, c, t, *, compressed=False):
+            def body(pp, cc, tt):
+                with tp.tp_context("model", compressed=compressed):
+                    return M.decode_step(pp, cc, tt, cfg)
+            return shard_map(body, mesh=mesh, in_specs=(pspecs, cspecs,
+                                                        rep(t)),
+                             out_specs=(P(), cspecs),
+                             check_vma=False)(p, c, t)
+
+        tp_toks, tp_logits = greedy(jax.jit(sm_prefill), jax.jit(sm_decode),
+                                    params_s)
+        # compressed seams: bounded error vs the exact-psum prefill logits,
+        # not bit parity
+        logits_x, _ = jax.jit(sm_prefill)(params_s, inputs)
+        logits_c, _ = jax.jit(
+            functools.partial(sm_prefill, compressed=True))(params_s, inputs)
+        out[f"mesh{n}_tokens_equal"] = bool(np.array_equal(ref_toks, tp_toks))
+        out[f"mesh{n}_logit_err"] = float(np.max(np.abs(tp_logits -
+                                                        ref_logits)))
+        out[f"mesh{n}_compressed_rel"] = float(
+            np.max(np.abs(np.asarray(logits_c) - np.asarray(logits_x))) /
+            (np.max(np.abs(np.asarray(logits_x))) + 1e-9))
+    print(json.dumps(out))
+
+
+def serve_sharded():
+    """Tensor-parallel ContinuousEngine == 1-device ContinuousEngine, token
+    for token: contiguous + paged layouts, shard_map + GSPMD paths, two mesh
+    shapes, two arrival orderings; compressed seams must at least serve."""
+    from repro.launch import mesh as mesh_lib
+    from repro.models import model as M
+    from repro.models import modules as nn
+    from repro.models.config import ModelConfig
+    from repro.serve.engine import ContinuousEngine, ServeConfig
+
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64,
+                      n_heads=8, n_kv_heads=4, d_ff=256, vocab=128,
+                      dtype="float32")
+    params = nn.unwrap(M.init_lm(jax.random.PRNGKey(0), cfg))
+    rng = np.random.default_rng(7)
+    # few distinct lengths -> few prefill compiles; > capacity requests so
+    # ordering changes the batching/splicing pattern
+    reqs = [(rng.integers(1, 128, n).astype(np.int32), b)
+            for n, b in ((6, 5), (12, 4), (6, 6), (18, 3), (12, 5))]
+
+    def run(mesh=None, paged=False, reverse=False, **kw):
+        scfg = ServeConfig(max_len=48, capacity=3, paged=paged, page_size=8,
+                           prefill_chunk=8 if paged else None, **kw)
+        eng = ContinuousEngine(params, cfg, scfg, mesh=mesh)
+        order = reqs[::-1] if reverse else reqs
+        for p, b in order:
+            eng.submit(p, b)
+        done = eng.run(max_steps=2000)
+        return {tuple(p.tolist()): done[uid].tolist()
+                for uid, (p, _) in enumerate(order)}
+
+    ref = run()
+    out = {"ref_paged_equal": run(paged=True) == ref}
+    for n in (2, 4):
+        mesh = mesh_lib.mesh_for((n,), ("model",))
+        for paged in (False, True):
+            for reverse in (False, True):
+                got = run(mesh=mesh, paged=paged, reverse=reverse)
+                key = (f"mesh{n}_{'paged' if paged else 'contig'}"
+                       f"_{'rev' if reverse else 'fwd'}")
+                out[key] = got == ref
+        out[f"mesh{n}_gspmd"] = run(mesh=mesh, tp_mode="gspmd") == ref
+        comp = run(mesh=mesh, compressed_collectives=True)
+        out[f"mesh{n}_compressed_served"] = sorted(
+            len(v) for v in comp.values()) == sorted(b for _, b in reqs)
+    print(json.dumps(out))
+
+
 def elastic():
     """Save params sharded on (4,2), restore onto (2,4) and (8,1) —
     values must be identical (mesh-independent checkpoints)."""
@@ -198,5 +326,7 @@ if __name__ == "__main__":
     assert len(jax.devices()) == 8, jax.devices()
     {"train_parity": train_parity,
      "compressed_psum": compressed_psum_test,
+     "tp_parity": tp_parity,
+     "serve_sharded": serve_sharded,
      "elastic": elastic,
      "elastic_supervised": elastic_supervised}[mode]()

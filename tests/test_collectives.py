@@ -8,7 +8,8 @@ from hypothesis import given, settings
 from hypothesis import strategies as st
 from hypothesis.extra import numpy as hnp
 
-from repro.dist.collectives import dequantize_int8, quantize_int8
+from repro.dist.collectives import (compressed_psum, dequantize_int8,
+                                    quantize_int8)
 from repro.models.attention import rope
 
 
@@ -38,6 +39,144 @@ class TestInt8Quantization:
         y = np.asarray(dequantize_int8(q, s, pad, xj.shape))
         scale_bound = np.asarray(s).max() * 0.5 + 1e-6
         assert np.max(np.abs(y - x)) <= scale_bound + 1e-4 * np.max(np.abs(x) + 1)
+
+
+class TestCompressedPsumDtypeParity:
+    """Regression: compressed_psum must come back in the INPUT dtype, like
+    jax.lax.psum — the internal f32 dequantize+accumulate leaking out would
+    silently double every downstream bf16 buffer it feeds."""
+
+    def _psum_1dev(self, x):
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.compat import shard_map
+        mesh = jax.make_mesh((1,), ("pod",))
+        return shard_map(lambda v: compressed_psum(v, "pod"), mesh=mesh,
+                         in_specs=P(*([None] * x.ndim)),
+                         out_specs=P(*([None] * x.ndim)),
+                         check_vma=False)(x)
+
+    def test_bf16_stays_bf16(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((8, 32)), jnp.bfloat16)
+        out = self._psum_1dev(x)
+        assert out.dtype == jnp.bfloat16, out.dtype
+
+    def test_f32_stays_f32_and_single_shard_is_roundtrip(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.standard_normal((130,)), jnp.float32)
+        out = self._psum_1dev(x)
+        assert out.dtype == jnp.float32
+        # one shard: the "sum" is just quantize->dequantize
+        q, s, pad = quantize_int8(x)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(dequantize_int8(q, s, pad, x.shape)))
+
+
+class TestNonFiniteContract:
+    """quantize_int8 SANITIZES non-finite elements (see dist.collectives):
+    scales see only finite magnitudes, NaN -> 0, ±Inf clamps to the block's
+    finite extreme — one bad element never poisons its block."""
+
+    def test_nan_quantizes_to_zero_others_survive(self):
+        x = np.linspace(-2.0, 2.0, 64).astype(np.float32)
+        x[13] = np.nan
+        q, s, pad = quantize_int8(jnp.asarray(x))
+        y = np.asarray(dequantize_int8(q, s, pad, x.shape))
+        assert np.isfinite(y).all()
+        assert y[13] == 0.0
+        ok = np.delete(np.arange(64), 13)
+        assert np.max(np.abs(y[ok] - x[ok])) <= 2.0 / 254 + 1e-7
+
+    def test_inf_clamps_to_finite_extreme(self):
+        x = np.linspace(-1.0, 1.0, 64).astype(np.float32)
+        x[0], x[1] = np.inf, -np.inf
+        q, s, pad = quantize_int8(jnp.asarray(x))
+        y = np.asarray(dequantize_int8(q, s, pad, x.shape))
+        amax = np.max(np.abs(x[2:]))
+        assert np.isfinite(y).all()
+        np.testing.assert_allclose(y[0], amax, rtol=1e-2)
+        np.testing.assert_allclose(y[1], -amax, rtol=1e-2)
+
+    def test_scale_ignores_nonfinite(self):
+        # without sanitize the scale would be inf/nan and the whole block 0
+        x = np.full((64,), 0.5, np.float32)
+        x[7] = np.inf
+        _, s, _ = quantize_int8(jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(s), 0.5 / 127.0, rtol=1e-6)
+
+    def test_all_nonfinite_block_is_zeroed(self):
+        x = np.full((64,), np.nan, np.float32)
+        x[::2] = np.inf
+        q, s, pad = quantize_int8(jnp.asarray(x))
+        y = np.asarray(dequantize_int8(q, s, pad, x.shape))
+        np.testing.assert_array_equal(y, 0.0)
+
+    def test_nonfinite_cannot_cross_blocks(self):
+        x = np.ones((128,), np.float32)
+        x[3] = np.nan       # block 0 poisoned element
+        q, s, pad = quantize_int8(jnp.asarray(x))
+        y = np.asarray(dequantize_int8(q, s, pad, x.shape))
+        np.testing.assert_allclose(y[64:], 1.0, rtol=1e-2)
+
+    def test_compressed_psum_stays_finite(self):
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.compat import shard_map
+        x = jnp.asarray(np.r_[np.nan, np.inf, np.ones(62)], jnp.float32)
+        mesh = jax.make_mesh((1,), ("pod",))
+        out = shard_map(lambda v: compressed_psum(v, "pod"), mesh=mesh,
+                        in_specs=P(None), out_specs=P(None),
+                        check_vma=False)(x)
+        assert np.isfinite(np.asarray(out)).all()
+
+
+@st.composite
+def _quant_inputs(draw):
+    """Shapes that pad (total size not a multiple of the block), all-zero
+    blocks, and both serving dtypes."""
+    shape = draw(hnp.array_shapes(min_dims=1, max_dims=3, max_side=70))
+    kind = draw(st.sampled_from(["random", "zeros", "mixed"]))
+    if kind == "zeros":
+        x = np.zeros(shape, np.float32)
+    else:
+        x = draw(hnp.arrays(np.float32, shape,
+                            elements=st.floats(-1e4, 1e4, width=32)))
+        if kind == "mixed" and x.size >= 64:
+            x.reshape(-1)[:64] = 0.0          # an exactly-zero block
+    dtype = draw(st.sampled_from([np.float32, jnp.bfloat16]))
+    return x, dtype
+
+
+class TestQuantizationErrorBoundProperty:
+    @given(_quant_inputs())
+    @settings(max_examples=60, deadline=None)
+    def test_per_element_error_bound(self, case):
+        """dequantize(quantize(x)) honors the PER-ELEMENT bound
+        max|block| / 254 for every element of every block — across padding
+        shapes, all-zero blocks, and bf16/f32 inputs."""
+        x, dtype = case
+        xj = jnp.asarray(x).astype(dtype)
+        xf = np.asarray(xj, np.float32)       # what quantize actually sees
+        q, s, pad = quantize_int8(xj, block=64)
+        y = np.asarray(dequantize_int8(q, s, pad, xj.shape, dtype=jnp.float32))
+        flat_x = np.concatenate([xf.reshape(-1),
+                                 np.zeros(pad, np.float32)]).reshape(-1, 64)
+        flat_y = np.concatenate([y.reshape(-1),
+                                 np.zeros(pad, np.float32)]).reshape(-1, 64)
+        bound = np.max(np.abs(flat_x), axis=1, keepdims=True) / 254.0
+        # the bound is exact in real arithmetic; f32 division can land an
+        # element a half-ULP past the rounding midpoint, hence the 1e-5
+        # relative slack
+        assert (np.abs(flat_y - flat_x) <= bound * (1 + 1e-5) + 1e-6).all()
+
+    @given(_quant_inputs())
+    @settings(max_examples=30, deadline=None)
+    def test_zero_blocks_roundtrip_exactly(self, case):
+        x, dtype = case
+        xj = jnp.asarray(x).astype(dtype)
+        q, s, pad = quantize_int8(xj, block=64)
+        y = np.asarray(dequantize_int8(q, s, pad, xj.shape))
+        zero_in = np.asarray(xj, np.float32) == 0.0
+        np.testing.assert_array_equal(y[zero_in], 0.0)
 
 
 class TestRopeProperties:

@@ -141,6 +141,36 @@ class TestHotSwapDifferential:
         assert eng.stats["schedule_swaps"] == 0
 
 
+class TestMidStepPromotion:
+    def test_commit_during_emission_swaps_same_step(self, params, reference):
+        """Regression: the store version is polled at EVERY dispatch site,
+        not just the top of step().  A commit landing from an on_token
+        callback during the admission prefill's emission must be picked up
+        by the SAME step's decode dispatch — a top-of-step-only poll would
+        leave the swap uncounted (and the decode traced against stale
+        schedules) until the next step began."""
+        reqs, want = reference
+        store = ScheduleCache()
+        committed = []
+
+        def promote_once(req, tok):
+            if not committed:
+                committed.append(tok)
+                _promote_prefill_schedule(store)
+
+        with schedule_cache(store):
+            eng = ContinuousEngine(params, CFG,
+                                   ServeConfig(max_len=MAX_LEN, capacity=2),
+                                   on_token=promote_once)
+            h = eng.submit(*reqs[0])
+            eng.step()   # prefill emits -> callback commits -> decode polls
+            assert committed, "first token never emitted"
+            assert eng.stats["schedule_swaps"] == 1, \
+                "mid-step commit not picked up within the same step"
+            out = eng.run(max_steps=10_000)
+        np.testing.assert_array_equal(out[h.uid], want[0])
+
+
 class TestPagedObsWiring:
     def test_pool_and_prefix_metrics_registered(self, params, reference):
         reqs, _ = reference

@@ -38,6 +38,23 @@ class TestShardedExecution:
         assert r["rel_err"] < 2e-2, r
         assert r["exact_is_exact"] < 1e-6, r
 
+    def test_manual_tp_matches_single_device(self):
+        """dist.tp shard_map prefill+decode: exact greedy tokens at mesh 2
+        and 4; compressed seams within int8 tolerance."""
+        r = run_subproc("tp_parity")
+        for n in (2, 4):
+            assert r[f"mesh{n}_tokens_equal"] is True, r
+            assert r[f"mesh{n}_logit_err"] < 1e-4, r
+            assert r[f"mesh{n}_compressed_rel"] < 5e-2, r
+
+    def test_sharded_serve_token_identical(self):
+        """The tentpole differential gate: tensor-parallel ContinuousEngine
+        (contiguous AND paged, shard_map AND gspmd) produces the 1-device
+        engine's exact greedy tokens at two mesh shapes and two arrival
+        orderings; compressed-collective serving completes every request."""
+        r = run_subproc("serve_sharded")
+        assert all(r.values()), {k: v for k, v in r.items() if not v}
+
     def test_elastic_reshard_roundtrip(self):
         r = run_subproc("elastic")
         assert r["identical"] is True, r
